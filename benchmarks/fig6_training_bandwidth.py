@@ -1,0 +1,87 @@
+"""Figure 6 reproduction: end-to-end training step time vs D2H bandwidth.
+
+Paper setup (§7.2): LLaMA-8B and DeepSeek-V3 trained on an 8-NPU node.
+The *baseline* satisfies memory via full activation recomputation (their
+Table 1/2 configs); *hierarchical memory* instead offloads activations to
+the pool, choosing per-bandwidth how many layers' activations to offload
+(the rest still recompute) so the DMA traffic stays hidden.
+
+Paper claims: ≈parity at the measured 33.6 GB/s; +5.7–21.5 % (LLaMA-8B)
+and +2–12.3 % (DeepSeek-V3) over 40–70 GB/s.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import insertion, memsim, timeline, tracer
+from repro.core.costmodel import ASCEND_LIKE
+
+from benchmarks.paper_models import DEEPSEEK_V3, LLAMA8B
+
+BANDWIDTHS = [33.6e9, 40e9, 50e9, 60e9, 70e9]
+SHARDS = 8          # 8-NPU node, DP=8
+CAPACITY = 64e9     # HBM per NPU
+
+
+def _step_time(cfg, batch, seq, hw, n_offload: int, opt_states_remote: bool):
+    """Simulated step time when the first ``n_offload`` layers' activations
+    are pool-offloaded and the rest recompute."""
+    n_layers = cfg.n_layers
+    recompute = frozenset(range(n_offload, n_layers))
+    opts = tracer.TraceOptions(shards=SHARDS,
+                               remote_opt_states=opt_states_remote)
+    g = tracer.trace_train_step(cfg, batch, seq, opts, recompute_layers=recompute)
+    force = tuple(f"act_{i}" for i in range(n_offload))
+    g2 = insertion.insert_cache_ops(
+        g, hw, insertion.InsertionOptions(
+            offload_activations=False, offload_states=opt_states_remote,
+            force_tensors=force))
+    tl = timeline.simulate(g2, hw)
+    mem = memsim.simulate(g2)
+    return tl, mem
+
+
+def run(batch: int = 16, seq: int = 4096) -> List[Dict]:
+    rows = []
+    for cfg in (LLAMA8B, DEEPSEEK_V3):
+        base_hw = ASCEND_LIKE
+        base_tl, base_mem = _step_time(cfg, batch, seq, base_hw, 0, False)
+        for bw in BANDWIDTHS:
+            hw = ASCEND_LIKE.with_pool_bw(bw)
+            best = None
+            for k in range(0, cfg.n_layers + 1, max(1, cfg.n_layers // 8)):
+                # hierarchical memory offloads activations of k layers AND
+                # parks optimizer states in the pool (the paper's
+                # "activations and a subset of parameters", §7.2.1)
+                tl, mem = _step_time(cfg, batch, seq, hw, k, True)
+                if mem.peak_bytes > CAPACITY:
+                    continue
+                if best is None or tl.total < best[0].total:
+                    best = (tl, mem, k)
+            if best is None:
+                continue  # nothing fits this capacity
+            tl, mem, k = best
+            rows.append({
+                "model": cfg.name,
+                "bw_gbs": bw / 1e9,
+                "baseline_ms": base_tl.total * 1e3,
+                "hyper_ms": tl.total * 1e3,
+                "improvement_pct": 100 * (base_tl.total - tl.total) / base_tl.total,
+                "exposed_ms": tl.exposed_comm * 1e3,
+                "offloaded_layers": k,
+                "base_peak_gb": base_mem.peak_bytes / 1e9,
+                "hyper_peak_gb": mem.peak_bytes / 1e9,
+            })
+    return rows
+
+
+def main():
+    for r in run():
+        print("fig6,%s,%.1f,%.1f,%.1f,%.2f,%d" % (
+            r["model"], r["bw_gbs"], r["baseline_ms"], r["hyper_ms"],
+            r["improvement_pct"], r["offloaded_layers"]))
+
+
+if __name__ == "__main__":
+    main()

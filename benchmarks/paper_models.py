@@ -1,0 +1,78 @@
+"""Model configs for the paper's own evaluation workloads (§7).
+
+These are *benchmark-only* configs (the 10 assigned architectures live in
+src/repro/configs): LLaMA-8B [arXiv:2407.21783] and a DeepSeek-V3-like
+MoE+MLA config [arXiv:2412.19437] used for the Fig. 6 / Tables 3-6
+reproductions.
+"""
+
+from repro.configs.base import (
+    LayerSpec,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    Segment,
+)
+
+DENSE = LayerSpec(mixer="attn", ffn="swiglu")
+MOE_MLA = LayerSpec(mixer="mla", ffn="moe")
+
+LLAMA8B = ModelConfig(
+    name="llama3-8b",
+    family="dense",
+    citation="arXiv:2407.21783",
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    segments=(Segment(pattern=(DENSE,), repeats=32),),
+    rope_theta=500000.0,
+    tie_embeddings=False,
+)
+
+# DeepSeek-V3: 61 layers, d_model 7168, MLA, 256 routed experts top-8
+# (d_ff_expert 2048). The full 671B model's states (~8 TB) cannot exist on
+# the paper's stated 8-NPU node under any parallelism, so — like the paper's
+# own experiment must have — we use a node-scale proxy: same depth/width/
+# MLA dims, 10 routed experts (≈40B params, ≈24B active), which saturates
+# the 8×64 GB node exactly the way §7.2.2 describes. Documented deviation.
+# Full-size DeepSeek-V3 (256 experts) — used only for analytic memory math
+# in the inference tables (no arrays are ever materialized from this).
+DEEPSEEK_V3_FULL = ModelConfig(
+    name="deepseek-v3-full",
+    family="moe",
+    citation="arXiv:2412.19437",
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=64,
+    d_ff=18432,
+    vocab_size=129280,
+    segments=(Segment(pattern=(MOE_MLA,), repeats=61),),
+    tie_embeddings=False,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=256, top_k=8, d_ff_expert=2048,
+                  capacity_factor=1.25),
+)
+
+DEEPSEEK_V3 = ModelConfig(
+    name="deepseek-v3-like",
+    family="moe",
+    citation="arXiv:2412.19437",
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=64,
+    d_ff=18432,
+    vocab_size=129280,
+    segments=(Segment(pattern=(MOE_MLA,), repeats=61),),
+    tie_embeddings=False,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=10, top_k=8, d_ff_expert=2048,
+                  capacity_factor=1.25),
+)

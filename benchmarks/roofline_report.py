@@ -1,0 +1,48 @@
+"""Regenerate the EXPERIMENTS.md §Roofline tables from dry-run JSON records.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        [--records results/dryrun.json] [--mesh 16x16|2x16x16|all]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def table(records, mesh: str) -> str:
+    rows = [r for r in records if "roofline" in r and r.get("mesh") == mesh]
+    out = ["| arch | shape | peak GB/dev | compute s | memory s | "
+           "collective s | dominant | useful-FLOPs |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], SHAPE_ORDER[r["shape"]])):
+        t = r["roofline"]
+        out.append("| %s | %s | %.2f | %.3f | %.3f | %.3f | **%s** | %.2f |" % (
+            r["arch"], r["shape"], r["memory_analysis"]["peak_gb"],
+            t["compute_s"], t["memory_s"], t["collective_s"], t["dominant"],
+            t["useful_flops_ratio"]))
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", default="results/dryrun.json")
+    ap.add_argument("--mesh", default="all")
+    args = ap.parse_args(argv)
+    records = json.load(open(args.records))
+    meshes = ("16x16", "2x16x16") if args.mesh == "all" else (args.mesh,)
+    for m in meshes:
+        print(f"\n## mesh {m}\n")
+        print(table(records, m))
+    fails = [r for r in records if "error" in r]
+    if fails:
+        print(f"\n{len(fails)} FAILED combos:")
+        for r in fails:
+            print(" ", r["arch"], r["shape"], r["mesh"], r["error"])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

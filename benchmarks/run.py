@@ -1,0 +1,45 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6,table3,...]
+
+Prints ``name,<fields...>`` CSV rows per benchmark plus timing per module
+(the quantities EXPERIMENTS.md tracks).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+BENCHES = ("fig6", "table3", "table4", "table5", "table6")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else set(BENCHES)
+
+    import benchmarks.fig6_training_bandwidth as fig6
+    import benchmarks.table3_kv_offload as t3
+    import benchmarks.table4_long_seq as t4
+    import benchmarks.table5_short_seq as t5
+    import benchmarks.table6_sparse_blocks as t6
+
+    mods = {"fig6": fig6, "table3": t3, "table4": t4, "table5": t5,
+            "table6": t6}
+    print("benchmark,fields...")
+    for name in BENCHES:
+        if name not in only:
+            continue
+        t0 = time.time()
+        mods[name].main()
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,138 @@
+"""Table 4 reproduction: long-sequence inference stability.
+
+Paper: with device memory near capacity, the resident-KV baseline triggers
+57 defragmentation events (prefill 129.3 s); hierarchical memory
+eliminates them (99.4 s prefill, −23.1 %; end-to-end −13.8 %).
+
+Fragmentation model: long-context serving keeps *multiple concurrent KV
+lifecycles* (§2.1's RAG sub-queries / multi-turn sessions). Requests of
+varying lengths arrive and retire; each grows its KV cache in chunks
+interleaved with transient activation buffers. Near capacity, first-fit
+leaves holes no new chunk fits, forcing compactions. The offloaded variant
+streams KV chunks to the pool as they are produced, so the device working
+set stays small and the allocator never fragments.
+
+Each compaction costs a pipeline-drain stall (DEFRAG_STALL, calibrated to
+the paper's ~0.52 s/event) + live-byte movement at HBM bandwidth; the
+defrag COUNT and its elimination are the model's predictions.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.allocator import FirstFitAllocator
+from repro.core import insertion, timeline, tracer
+from repro.core.costmodel import ASCEND_LIKE
+
+from benchmarks.paper_models import DEEPSEEK_V3_FULL
+from benchmarks.table5_short_seq import decode_token_time
+
+SHARDS = 8
+BATCH = 26
+SEQ = 71_000
+W4 = 0.53
+KV_READ_FRACTION = 0.06
+DEFRAG_STALL = 0.45
+DECODE_TOKENS = 512
+CAPACITY = 64e9
+
+KV_PER_TOKEN = DEEPSEEK_V3_FULL.kv_bytes_per_token(2) * BATCH / SHARDS
+WEIGHTS = DEEPSEEK_V3_FULL.param_count() * W4 / SHARDS
+CHUNK_TOKENS = 2048
+
+
+def serving_trace(seed: int = 0, n_requests: int = 96,
+                  remote_kv: bool = False) -> Tuple[int, int]:
+    """Replay a staggered multi-request serving episode through the
+    allocator; returns (defrag_events, bytes_moved)."""
+    rng = np.random.default_rng(seed)
+    alloc = FirstFitAllocator(int(CAPACITY - WEIGHTS), alignment=4096)
+    live: List[Tuple[str, int]] = []   # (request prefix, n_chunks)
+    defrag0 = 0
+    uid = 0
+    for r in range(n_requests):
+        seq = int(rng.uniform(0.3, 1.0) * SEQ)
+        n_chunks = max(1, seq // CHUNK_TOKENS)
+        chunk_bytes = int(KV_PER_TOKEN * CHUNK_TOKENS)
+        if remote_kv:
+            chunk_bytes = max(4096, int(chunk_bytes * KV_READ_FRACTION))
+        # retire one or two old requests to make room (staggered lifecycle)
+        while live and (len(live) >= 4 or rng.uniform() < 0.3):
+            name, k = live.pop(0)
+            for c in range(k):
+                alloc.free(f"{name}_c{c}")
+        name = f"r{uid}"
+        uid += 1
+        ok = True
+        for c in range(n_chunks):
+            # transient activation buffer churn between chunk allocations
+            tb = f"{name}_t{c}"
+            alloc.alloc(tb, int(rng.uniform(0.5, 2.0) * 256e6))
+            if not alloc.alloc(f"{name}_c{c}", chunk_bytes):
+                ok = False
+            alloc.free(tb)
+            if not ok:
+                break
+        live.append((name, n_chunks))
+    return alloc.stats.defrag_events, alloc.stats.bytes_moved
+
+
+def _prefill_compute(remote_kv: bool) -> float:
+    opts = tracer.TraceOptions(shards=SHARDS, remote_kv=remote_kv,
+                               remote_opt_states=False, weight_dtype_bytes=W4,
+                               kv_read_fraction=KV_READ_FRACTION)
+    g = tracer.trace_prefill(DEEPSEEK_V3_FULL, BATCH, SEQ, opts)
+    if remote_kv:
+        g = insertion.insert_cache_ops(
+            g, ASCEND_LIKE,
+            insertion.InsertionOptions(offload_activations=False,
+                                       force_prefixes=("kv_",)))
+    else:
+        g = g.residentize()
+    return timeline.simulate(g, ASCEND_LIKE).total
+
+
+def run() -> List[Dict]:
+    ev_base, moved_base = serving_trace(remote_kv=False)
+    ev_off, moved_off = serving_trace(remote_kv=True)
+
+    pre_base = (_prefill_compute(False) + ev_base * DEFRAG_STALL
+                + moved_base / ASCEND_LIKE.hbm_bw)
+    pre_off = (_prefill_compute(True) + ev_off * DEFRAG_STALL
+               + moved_off / ASCEND_LIKE.hbm_bw)
+    dec_base = decode_token_time(False, seq=SEQ)
+    dec_off = decode_token_time(True, seq=SEQ)
+    e2e_base = pre_base + DECODE_TOKENS * dec_base
+    e2e_off = pre_off + DECODE_TOKENS * dec_off
+
+    return [{
+        "metric": "defrag_events",
+        "baseline": ev_base, "hierarchical": ev_off,
+        "paper_baseline": 57, "paper_hier": 0,
+    }, {
+        "metric": "prefill_latency_s",
+        "baseline": pre_base, "hierarchical": pre_off,
+        "relative_change": (pre_off - pre_base) / pre_base,
+        "paper_change": -0.2313,
+    }, {
+        "metric": "end_to_end_latency_s",
+        "baseline": e2e_base, "hierarchical": e2e_off,
+        "relative_change": (e2e_off - e2e_base) / e2e_base,
+        "paper_change": -0.1378,
+    }]
+
+
+def main():
+    for r in run():
+        print("table4,%s,%.2f,%.2f,%s" % (
+            r["metric"], r["baseline"], r["hierarchical"],
+            ("%.3f vs paper %.3f" % (r["relative_change"], r["paper_change"]))
+            if "relative_change" in r else
+            "paper: %s->%s" % (r["paper_baseline"], r["paper_hier"])))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Table 5 reproduction: short-sequence inference latency breakdown.
+
+Paper: prefill parity (<1 % — 62.19 vs 62.49 s), decode slowdown under
+coarse sparse blocks (0.117 → 0.146 s/token, +25.5 %), end-to-end ≈0.15 %.
+
+Decode overhead model: the hierarchical path's per-step cost adds CPU-side
+sparse-block selection + partial KV-cache update processing — bytes of the
+selected blocks moving through host-side copies at CPU_COPY_BW. The paper
+notes (§7.4) this grows with sparse-block granularity; table6 sweeps it.
+
+NOTE (recorded in EXPERIMENTS.md): the paper's own Table 5 is internally
+inconsistent — prefill 62.5 s + hundreds of 0.146 s decode steps cannot
+total 177.1 s while the baseline with 0.117 s steps totals 177.4 s. We
+reproduce each row's metric and report a *consistent* derived end-to-end.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import insertion, memsim, timeline, tracer
+from repro.core.costmodel import ASCEND_LIKE
+
+from benchmarks.paper_models import DEEPSEEK_V3_FULL
+
+SHARDS = 8
+BATCH = 26
+SEQ_SHORT = 16_384
+W4 = 0.53
+KV_READ_FRACTION = 0.06
+CPU_COPY_BW = 30e9           # host-side block processing throughput (calibrated
+                             # to the paper's +25.5 % decode point; the
+                             # granularity sweep in table6 is the prediction)
+DECODE_TOKENS = 128          # short-generation regime (see EXPERIMENTS.md
+                             # on the paper's internally inconsistent e2e)
+
+
+def decode_token_time(remote_kv: bool, seq: int = SEQ_SHORT,
+                      block_efficiency: float = 1.0) -> float:
+    """Per-token decode latency. ``block_efficiency`` < 1 models coarser
+    sparse blocks (more over-fetch + CPU processing per selected byte)."""
+    opts = tracer.TraceOptions(shards=SHARDS, remote_kv=remote_kv,
+                               remote_opt_states=False, weight_dtype_bytes=W4,
+                               kv_read_fraction=KV_READ_FRACTION)
+    g = tracer.trace_decode_step(DEEPSEEK_V3_FULL, BATCH, seq, opts)
+    if remote_kv:
+        g = insertion.insert_cache_ops(
+            g, ASCEND_LIKE,
+            insertion.InsertionOptions(offload_activations=False,
+                                       force_prefixes=("kv_",)))
+        tl = timeline.simulate(g, ASCEND_LIKE)
+        kv_read = sum(info.nbytes for t, info in g.tensors.items()
+                      if t.startswith("kv_"))
+        cpu = kv_read / (CPU_COPY_BW * block_efficiency)
+        return tl.total + cpu
+    return timeline.simulate(g.residentize(), ASCEND_LIKE).total
+
+
+def prefill_time(remote_kv: bool) -> float:
+    opts = tracer.TraceOptions(shards=SHARDS, remote_kv=remote_kv,
+                               remote_opt_states=False, weight_dtype_bytes=W4,
+                               kv_read_fraction=KV_READ_FRACTION)
+    g = tracer.trace_prefill(DEEPSEEK_V3_FULL, BATCH, SEQ_SHORT, opts)
+    if remote_kv:
+        g = insertion.insert_cache_ops(
+            g, ASCEND_LIKE,
+            insertion.InsertionOptions(offload_activations=False,
+                                       force_prefixes=("kv_",)))
+        return timeline.simulate(g, ASCEND_LIKE).total
+    return timeline.simulate(g.residentize(), ASCEND_LIKE).total
+
+
+def run(block_efficiency: float = 1.0) -> List[Dict]:
+    pre_b, pre_o = prefill_time(False), prefill_time(True)
+    dec_b = decode_token_time(False)
+    dec_o = decode_token_time(True, block_efficiency=block_efficiency)
+    e2e_b = pre_b + DECODE_TOKENS * dec_b
+    e2e_o = pre_o + DECODE_TOKENS * dec_o
+    return [{
+        "metric": "prefill_latency_s", "baseline": pre_b, "hierarchical": pre_o,
+        "relative_change": (pre_o - pre_b) / pre_b, "paper_change": -0.0048,
+    }, {
+        "metric": "decode_latency_s", "baseline": dec_b, "hierarchical": dec_o,
+        "relative_change": (dec_o - dec_b) / dec_b, "paper_change": 0.2547,
+    }, {
+        "metric": "end_to_end_latency_s", "baseline": e2e_b, "hierarchical": e2e_o,
+        "relative_change": (e2e_o - e2e_b) / e2e_b, "paper_change": -0.0015,
+    }]
+
+
+def main():
+    for r in run():
+        print("table5,%s,%.4f,%.4f,%.4f,paper:%.4f" % (
+            r["metric"], r["baseline"], r["hierarchical"],
+            r["relative_change"], r["paper_change"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: train a small model with HyperOffload memory management,
+then generate from it.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Demonstrates the three offload mechanisms end to end on CPU:
+- activation offload (offload-aware remat policy),
+- optimizer-state host offload,
+- KV-cache host round trips during generation —
+all numerically identical to the resident baselines.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticTokens
+from repro.models.model import build_model
+from repro.serving.engine import ServeEngine
+from repro.training.step import TrainStepConfig, init_train_state, make_train_step
+
+
+def main():
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    model = build_model(cfg)
+    print(f"model: {cfg.name} ({cfg.n_layers} layers, d_model {cfg.d_model})")
+
+    ts = TrainStepConfig(remat="offload", offload_opt_state=True,
+                         peak_lr=2e-3, warmup=5, total_steps=60)
+    params, opt_state = init_train_state(model, jax.random.key(0), ts=ts)
+    step = make_train_step(model, ts)
+    data = SyntheticTokens(cfg.vocab_size, seq_len=32, global_batch=8, noise=0.05)
+
+    print("training with activation + optimizer-state offload...")
+    t0 = time.time()
+    for i in range(60):
+        params, opt_state, metrics = step(params, opt_state, data.batch(i))
+        if i % 20 == 0 or i == 59:
+            print(f"  step {i:3d}  loss {float(metrics['loss']):.4f}  "
+                  f"lr {float(metrics['lr']):.2e}")
+    print(f"  ({time.time() - t0:.1f}s; moments live in "
+          f"{jax.tree.leaves(opt_state.mu)[0].sharding.memory_kind})")
+
+    print("generating (resident cache vs host-offloaded cache)...")
+    prompt = {"tokens": data.batch(0)["tokens"][:, :16]}
+    resident = ServeEngine(model, params, max_seq=48)
+    offloaded = ServeEngine(model, params, max_seq=48, offload_kv=True)
+    out_r = resident.generate(prompt, 16)
+    out_o = offloaded.generate(prompt, 16)
+    assert bool(jnp.all(out_r == out_o)), "offload changed results!"
+    print(f"  identical generations; cache round trips: "
+          f"{offloaded.stats.cache_round_trips}")
+    print("  sample:", out_r[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

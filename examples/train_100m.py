@@ -1,0 +1,86 @@
+"""End-to-end driver: train a ~100M-parameter model for a few hundred steps
+with checkpointing, using the full training substrate.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+Builds a mid-size phi3-family config (~100M params), streams the synthetic
+deterministic pipeline, runs AdamW + cosine schedule with the HyperOffload
+memory policy, checkpoints periodically, and verifies resume.
+"""
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.configs.base import LayerSpec, Segment
+from repro.data.pipeline import SyntheticTokens
+from repro.models.model import build_model
+from repro.training.step import TrainStepConfig, init_train_state, make_train_step
+
+
+def make_100m_config():
+    base = get_config("phi3-mini-3.8b")
+    return dataclasses.replace(
+        base,
+        name="phi3-100m",
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=8,
+        head_dim=64,
+        d_ff=1536,
+        vocab_size=32064,
+        segments=(Segment(pattern=(LayerSpec(mixer="attn", ffn="swiglu"),),
+                          repeats=10),),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m")
+    args = ap.parse_args()
+
+    cfg = make_100m_config()
+    model = build_model(cfg)
+    ts = TrainStepConfig(remat="offload", offload_opt_state=False,
+                         peak_lr=6e-4, warmup=args.steps // 10,
+                         total_steps=args.steps)
+    params, opt_state = init_train_state(model, jax.random.key(0), ts=ts)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n / 1e6:.1f}M params, {args.steps} steps @ "
+          f"batch {args.batch} × seq {args.seq_len}")
+
+    step = make_train_step(model, ts)
+    data = SyntheticTokens(cfg.vocab_size, seq_len=args.seq_len,
+                           global_batch=args.batch, noise=0.05)
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    t0 = time.time()
+    losses = []
+    for i in range(args.steps):
+        params, opt_state, metrics = step(params, opt_state, data.batch(i))
+        losses.append(float(metrics["loss"]))
+        if i % 25 == 0 or i == args.steps - 1:
+            tok_s = args.batch * args.seq_len * (i + 1) / (time.time() - t0)
+            print(f"step {i:4d}  loss {losses[-1]:.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}  "
+                  f"({tok_s:.0f} tok/s)")
+        if (i + 1) % 100 == 0:
+            save_checkpoint(os.path.join(args.ckpt_dir, "latest.npz"),
+                            params, i + 1)
+    print(f"loss: {losses[0]:.3f} → {losses[-1]:.3f} "
+          f"(uniform floor ≈ {jax.numpy.log(cfg.vocab_size):.2f})")
+
+    restored, at = load_checkpoint(os.path.join(args.ckpt_dir, "latest.npz"),
+                                   params)
+    print(f"checkpoint resume verified at step {at}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""HyperOffload reproduction: graph-driven hierarchical memory management
+for LLMs, as a production-grade JAX framework. See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,64 @@
+"""Numpy-based pytree checkpointing (no orbax dependency).
+
+Flattens any params/optimizer pytree with jax.tree_util key paths into an
+``.npz`` plus a tiny JSON manifest; restore rebuilds the exact tree and
+re-places leaves on the current devices. Atomic via write-to-temp + rename.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":  # ml_dtypes (bf16, fp8) → f32 on disk
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    tmp = tempfile.NamedTemporaryFile(
+        dir=os.path.dirname(path) or ".", suffix=".tmp", delete=False)
+    try:
+        np.savez(tmp, **flat)
+        tmp.close()
+        os.replace(tmp.name, path)
+    finally:
+        if os.path.exists(tmp.name):
+            os.unlink(tmp.name)
+    with open(path + ".json", "w") as f:
+        json.dump({"step": step, "treedef": str(treedef),
+                   "keys": sorted(flat)}, f)
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    data = np.load(path)
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    flat_like = jax.tree_util.tree_flatten_with_path(like)[0]
+    leaves = []
+    for pathk, leaf in flat_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pathk)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta["step"]

@@ -1,0 +1,72 @@
+"""Architecture registry: the 10 assigned architectures + workload shapes."""
+
+from repro.configs.base import (
+    DECODE_32K,
+    INPUT_SHAPES,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    EncoderConfig,
+    InputShape,
+    LayerSpec,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    Segment,
+)
+
+from repro.configs.gemma2_9b import CONFIG as GEMMA2_9B
+from repro.configs.mamba2_370m import CONFIG as MAMBA2_370M
+from repro.configs.granite_moe_3b_a800m import CONFIG as GRANITE_MOE_3B
+from repro.configs.phi3_mini_3_8b import CONFIG as PHI3_MINI
+from repro.configs.zamba2_7b import CONFIG as ZAMBA2_7B
+from repro.configs.whisper_medium import CONFIG as WHISPER_MEDIUM
+from repro.configs.codeqwen1_5_7b import CONFIG as CODEQWEN15_7B
+from repro.configs.minicpm3_4b import CONFIG as MINICPM3_4B
+from repro.configs.qwen2_vl_72b import CONFIG as QWEN2_VL_72B
+from repro.configs.mixtral_8x22b import CONFIG as MIXTRAL_8X22B
+
+REGISTRY = {
+    c.name: c
+    for c in (
+        GEMMA2_9B,
+        MAMBA2_370M,
+        GRANITE_MOE_3B,
+        PHI3_MINI,
+        ZAMBA2_7B,
+        WHISPER_MEDIUM,
+        CODEQWEN15_7B,
+        MINICPM3_4B,
+        QWEN2_VL_72B,
+        MIXTRAL_8X22B,
+    )
+}
+
+ARCH_IDS = tuple(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+__all__ = [
+    "REGISTRY",
+    "ARCH_IDS",
+    "get_config",
+    "ModelConfig",
+    "InputShape",
+    "INPUT_SHAPES",
+    "LayerSpec",
+    "Segment",
+    "MLAConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "EncoderConfig",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+]

@@ -1,0 +1,32 @@
+"""HyperOffload core: graph-driven hierarchical memory management.
+
+The paper's contribution, reimplemented as a compiler layer over a
+layer-level IR:
+
+- ``ir``         — computation graph with first-class cache operators
+- ``costmodel``  — SuperNode/TPU hardware model (compute, HBM, pool links)
+- ``lifetime``   — tensor lifetime analysis over an execution order
+- ``memsim``     — device-memory ledger: peak usage for a given order
+- ``allocator``  — fragmentation-aware allocator simulator (defrag events)
+- ``insertion``  — compile-time Prefetch/Store/Detach insertion (§4.2.2)
+- ``schedule``   — Algorithm 1: graph-driven execution-order optimization
+- ``timeline``   — dual-stream (compute + DMA) execution timeline simulator
+- ``planner``    — end-to-end pipeline producing an OffloadPlan
+- ``tracer``     — ModelConfig → layer-level graphs (train/prefill/decode)
+- ``jax_exec``   — execute a plan on real JAX arrays with a host-side pool
+"""
+
+from repro.core.costmodel import HardwareSpec, ASCEND_LIKE, TPU_V5E
+from repro.core.ir import Graph, Node, TensorInfo
+from repro.core.planner import HyperOffloadPlanner, OffloadPlan
+
+__all__ = [
+    "Graph",
+    "Node",
+    "TensorInfo",
+    "HardwareSpec",
+    "ASCEND_LIKE",
+    "TPU_V5E",
+    "HyperOffloadPlanner",
+    "OffloadPlan",
+]

@@ -1,0 +1,65 @@
+"""Hardware model for the SuperNode memory hierarchy.
+
+The paper's platform is an Ascend 910C node attached to a shared memory pool
+(CloudMatrix384 Unified Bus); ours is TPU v5e with host/pooled DRAM as the
+remote tier. Both reduce to the same four numbers per device: peak FLOP/s,
+HBM bandwidth, remote-pool bandwidth (per direction), and HBM capacity.
+The pool bandwidth is deliberately sweepable — Figure 6 of the paper sweeps
+D2H bandwidth 33.6→70 GB/s and we reproduce that experiment directly.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    flops: float              # peak FLOP/s per device (bf16)
+    hbm_bw: float             # HBM bytes/s
+    hbm_bytes: float          # device memory capacity
+    pool_bw_d2r: float        # device -> remote pool bytes/s
+    pool_bw_r2d: float        # remote pool -> device bytes/s
+    link_bw: float            # inter-chip interconnect bytes/s per link
+    dma_issue_overhead: float = 2e-6   # fixed cost to launch one DMA
+    runtime_intervention: float = 30e-6  # CPU runtime swap decision cost
+                                         # (reactive baseline only, §3.1)
+
+    def with_pool_bw(self, bw: float) -> "HardwareSpec":
+        return replace(self, pool_bw_d2r=bw, pool_bw_r2d=bw)
+
+    # ------------------------------------------------------------------
+    def compute_time(self, flops: float, hbm_bytes: float) -> float:
+        """Roofline node time: max of compute and memory terms."""
+        return max(flops / self.flops, hbm_bytes / self.hbm_bw)
+
+    def transfer_time(self, nbytes: float, direction: str) -> float:
+        bw = self.pool_bw_d2r if direction == "d2r" else self.pool_bw_r2d
+        return self.dma_issue_overhead + nbytes / bw
+
+
+# TPU v5e (per chip) — target hardware for the framework.
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    flops=197e12,
+    hbm_bw=819e9,
+    hbm_bytes=16e9,
+    pool_bw_d2r=50e9,
+    pool_bw_r2d=50e9,
+    link_bw=50e9,
+)
+
+# Ascend-910C-like single device used to reproduce the paper's own numbers.
+# The paper's measured D2H bandwidth is 33.6 GB/s (§7.2.1); HBM ~1.6 TB/s
+# and ~280 TFLOP/s bf16 per 910C die pair are public figures (the exact
+# values only shift absolute times — the reproduced quantities are ratios).
+ASCEND_LIKE = HardwareSpec(
+    name="ascend_910c_like",
+    flops=280e12,
+    hbm_bw=1.6e12,
+    hbm_bytes=64e9,
+    pool_bw_d2r=33.6e9,
+    pool_bw_r2d=33.6e9,
+    link_bw=56e9,
+)

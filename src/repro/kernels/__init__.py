@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+- flash_attention — prefill attention (GQA, sliding window, logit softcap)
+- paged_attention — ring-cache decode attention (the HyperOffload serving
+  hot path: consumes pool-prefetched KV blocks tile-by-tile)
+- ssd_scan       — Mamba2 SSD chunked scan with VMEM state carry
+
+Each has a jit wrapper in ``ops`` and a pure-jnp oracle in ``ref``;
+``tests/test_kernels.py`` sweeps shapes/dtypes/flags in interpret mode.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,57 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On the CPU test/dry-run host the kernels execute in interpret mode; on real
+TPU set ``interpret=False`` (the module-level knob) to compile them. The
+model substrate calls these through ``repro.models.runtime`` dispatch.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import decode_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+# CPU backend executes Pallas in interpret mode only.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "logit_cap", "causal"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    scale: float, window: Optional[int] = None,
+                    logit_cap: Optional[float] = None,
+                    causal: bool = True) -> jax.Array:
+    """Model-layout flash attention: q (B,S,Hq,D), k/v (B,T,Hkv,D) →
+    (B,S,Hq,D)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_pallas(qt, kt, vt, scale=scale, causal=causal,
+                                 window=window, logit_cap=logit_cap,
+                                 interpret=INTERPRET)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "logit_cap"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, *, scale: float,
+                     logit_cap: Optional[float] = None) -> jax.Array:
+    """Ring-cache decode attention: q (B,1,Hq,D), cache (B,C,Hkv,D) →
+    (B,1,Hq,D)."""
+    q3 = q[:, 0]                              # (B, Hq, D)
+    kt = k.transpose(0, 2, 1, 3)              # (B, Hkv, C, D)
+    vt = v.transpose(0, 2, 1, 3)
+    out = decode_attention_pallas(q3, kt, vt, pos, scale=scale,
+                                  logit_cap=logit_cap, interpret=INTERPRET)
+    return out[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x: jax.Array, a: jax.Array, b_mat: jax.Array, c_mat: jax.Array,
+             chunk: int) -> Tuple[jax.Array, jax.Array]:
+    return ssd_scan_pallas(x, a, b_mat, c_mat, chunk, interpret=INTERPRET)

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests sweep against
+(tests/test_kernels.py: shapes × dtypes × flags, assert_allclose).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def _softcap(x, cap):
+    return x if cap is None else cap * jnp.tanh(x / cap)
+
+
+def flash_attention_ref(
+    q: jax.Array,   # (B, Hq, S, D)
+    k: jax.Array,   # (B, Hkv, T, D)
+    v: jax.Array,   # (B, Hkv, T, D)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+) -> jax.Array:
+    b, hq, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, s, d) * scale
+    kf = k.astype(jnp.float32)
+    sc = jnp.einsum("bkgsd,bktd->bkgst", qf, kf)
+    sc = _softcap(sc, logit_cap)
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,      # (B, Hq, D) — one token per sequence
+    k: jax.Array,      # (B, Hkv, C, D) ring cache
+    v: jax.Array,      # (B, Hkv, C, D)
+    pos: jax.Array,    # scalar int32 — token index just written
+    *,
+    scale: float,
+    logit_cap: Optional[float] = None,
+) -> jax.Array:
+    """Attention of one query over a ring-buffer cache: slot j holds token
+    t_j = pos - ((pos - j) mod C); valid iff t_j >= 0."""
+    b, hq, d = q.shape
+    hkv, c = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d) * scale
+    sc = jnp.einsum("bkgd,bkcd->bkgc", qf, k.astype(jnp.float32))
+    sc = _softcap(sc, logit_cap)
+    j = jnp.arange(c)
+    tj = pos - jnp.mod(pos - j, c)
+    sc = jnp.where((tj >= 0)[None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgc,bkcd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,     # (B, S, H, P) pre-scaled by dt
+    a: jax.Array,     # (B, S, H) = dt * A (negative)
+    b_mat: jax.Array,  # (B, S, H, N)
+    c_mat: jax.Array,  # (B, S, H, N)
+    chunk: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD oracle — delegates to the model-substrate implementation
+    (itself validated against the O(S) recurrence in tests/test_ssm.py)."""
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, a, b_mat, c_mat, chunk)

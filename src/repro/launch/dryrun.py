@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Backend (per-device codegen) optimization adds minutes per compile on this
+# single-core host but does not change SPMD partitioning, collectives, or
+# buffer assignment — verified: identical roofline terms and memory analysis
+# at level 0. The dry-run only consumes those artifacts.
+os.environ["XLA_FLAGS"] += " --xla_backend_optimization_level=0"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes with ShapeDtypeStruct stand-ins (no allocation).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-mini-3.8b \
+        --shape train_4k [--multi-pod] [--out results/dryrun.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+The two XLA_FLAGS lines above MUST precede every other import — JAX locks
+the device count at first initialization.
+
+Per combination this prints/records: memory_analysis (bytes per device —
+proves it fits), cost_analysis FLOPs/bytes, the parsed collective schedule,
+and the three roofline terms (§Roofline of EXPERIMENTS.md).
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, REGISTRY, InputShape, ModelConfig
+from repro.data.pipeline import make_batch_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import batch_shardings, cache_shardings, param_shardings
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWState
+from repro.roofline.analysis import roofline_from_compiled
+from repro.sharding.rules import DEFAULT_RULES, MULTIPOD_RULES, axis_rules
+from repro.training.step import TrainStepConfig, make_train_step
+
+
+def _rules_for(cfg: ModelConfig, shape: InputShape, mesh) -> Dict:
+    rules = dict(MULTIPOD_RULES if "pod" in mesh.axis_names else DEFAULT_RULES)
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    if shape.kind in ("train", "prefill"):
+        # Megatron-style sequence parallelism: the residual stream (and the
+        # per-layer activations saved for backward) stay seq-sharded over the
+        # model axis between layers — 16× smaller saved activations
+        rules["seq_act"] = ("model",)
+    if shape.kind == "decode" and cfg.n_kv_heads % model_size != 0:
+        # kv heads don't divide the model axis — shard the cache sequence
+        # dimension instead (XLA gathers K/V per layer; see EXPERIMENTS.md)
+        rules["cache_seq"] = ("model",)
+        rules["cache_heads"] = None
+    return rules
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              memory_mode: str = "offload", compile_: bool = True,
+              cfg_override: Optional[ModelConfig] = None,
+              rules_override: Optional[Dict] = None) -> Dict:
+    cfg = cfg_override if cfg_override is not None else REGISTRY[arch]
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    model = build_model(cfg, shape)
+    rules = _rules_for(cfg, shape, mesh)
+    if rules_override:
+        rules.update(rules_override)
+    dtype = jnp.bfloat16
+
+    rec: Dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "memory_mode": memory_mode,
+        "swa_variant": model.swa_override is not None,
+    }
+    t0 = time.time()
+    with axis_rules(rules, mesh), mesh:
+        param_spec = model.param_specs(dtype)
+        p_shard = param_shardings(param_spec, mesh, rules)
+
+        if shape.kind == "train":
+            batch_spec = make_batch_specs(cfg, shape.seq_len, shape.global_batch, dtype)
+            b_shard = batch_shardings(batch_spec, mesh, rules)
+            opt_spec = AdamWState(
+                step=jax.ShapeDtypeStruct((), jnp.int32),
+                mu=jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), param_spec),
+                nu=jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), param_spec),
+            )
+            o_shard = AdamWState(
+                step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                mu=param_shardings(opt_spec.mu, mesh, rules),
+                nu=param_shardings(opt_spec.nu, mesh, rules),
+            )
+            ts = TrainStepConfig(
+                remat="offload" if memory_mode == "offload" else "full")
+            step = make_train_step(model, ts, jit=False)
+            jitted = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(param_spec, opt_spec, batch_spec)
+            tokens = shape.global_batch * shape.seq_len
+
+        elif shape.kind == "prefill":
+            batch_spec = model.input_specs(shape, dtype)
+            b_shard = batch_shardings(batch_spec, mesh, rules)
+            cache_spec = model.cache_specs(shape.global_batch, shape.seq_len, dtype)
+            c_shard = cache_shardings(cache_spec, mesh, rules)
+
+            def prefill_step(params, batch, cache):
+                return model.prefill(params, batch, cache)
+
+            jitted = jax.jit(prefill_step,
+                             in_shardings=(p_shard, b_shard, c_shard),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(param_spec, batch_spec, cache_spec)
+            tokens = shape.global_batch * shape.seq_len
+
+        else:  # decode: ONE new token against a seq_len KV cache
+            cache_spec = model.cache_specs(shape.global_batch, shape.seq_len, dtype)
+            c_shard = cache_shardings(cache_spec, mesh, rules)
+            tok_spec = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            tok_shard = batch_shardings({"token": tok_spec}, mesh, rules)["token"]
+            pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            pos_shard = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+            def serve_step(params, cache, token, pos):
+                return model.decode_step(params, cache, token, pos)
+
+            jitted = jax.jit(serve_step,
+                             in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(param_spec, cache_spec, tok_spec, pos_spec)
+            tokens = shape.global_batch
+
+        rec["lower_s"] = round(time.time() - t0, 2)
+        if not compile_:
+            return rec
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            "argument_gb": mem.argument_size_in_bytes / 1e9,
+            "output_gb": mem.output_size_in_bytes / 1e9,
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+            "alias_gb": mem.alias_size_in_bytes / 1e9,
+            "peak_gb": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                        + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 1e9,
+        }
+        terms = roofline_from_compiled(compiled, cfg, tokens, n_dev,
+                                       train=(shape.kind == "train"))
+        rec["roofline"] = terms.row()
+        rec["collectives"] = terms.coll_breakdown
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(REGISTRY), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch × shape), single-pod + multi-pod")
+    ap.add_argument("--memory-mode", choices=("offload", "baseline"),
+                    default="offload")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.all:
+        for arch in REGISTRY:
+            for shape in INPUT_SHAPES:
+                combos.append((arch, shape, False))
+                combos.append((arch, shape, True))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos.append((args.arch, args.shape, args.multi_pod))
+
+    failures = 0
+    records = []
+    for arch, shape, mp in combos:
+        tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+        try:
+            rec = lower_one(arch, shape, multi_pod=mp,
+                            memory_mode=args.memory_mode)
+            records.append(rec)
+            r = rec.get("roofline", {})
+            print(f"OK   {tag}: peak {rec['memory_analysis']['peak_gb']:.2f} GB/dev, "
+                  f"compute {r.get('compute_s', 0):.4f}s mem {r.get('memory_s', 0):.4f}s "
+                  f"coll {r.get('collective_s', 0):.4f}s → {r.get('dominant')}")
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"FAIL {tag}: {type(e).__name__}: {e}")
+            records.append({"arch": arch, "shape": shape,
+                            "mesh": "2x16x16" if mp else "16x16",
+                            "error": f"{type(e).__name__}: {e}"})
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        with open(args.out, "w") as f:
+            json.dump(existing + records, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

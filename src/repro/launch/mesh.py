@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches JAX device state — the dry-run must set XLA_FLAGS before any
+device initialization.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 = 256 chips per pod ("data", "model"); the multi-pod variant is
+    2×16×16 = 512 chips ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (launch/dryrun.py does this)")
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev_array, axes)
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
+    """Tiny mesh on however many devices exist (tests)."""
+    n = int(np.prod(shape))
+    dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(dev_array, axes)

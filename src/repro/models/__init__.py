@@ -1,0 +1,8 @@
+from repro.models.model import (
+    Model,
+    build_model,
+    init_cache,
+    init_params,
+)
+
+__all__ = ["Model", "build_model", "init_params", "init_cache"]

@@ -1,0 +1,457 @@
+"""Attention mixers: GQA (sliding window, logit softcap, RoPE/M-RoPE),
+MLA (multi-head latent attention), cross-attention, and their decode paths.
+
+KV caches for sliding-window layers are ring buffers of capacity
+``min(window, max_seq)`` — token ``t`` lives in slot ``t % C`` — so a
+windowed layer at 500k context holds only ``window`` tokens of KV.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import runtime
+from repro.models.common import apply_rope, dense_init, rmsnorm, softcap
+from repro.sharding.rules import constrain
+
+NEG_INF = -2.3819763e38  # same constant XLA uses for -inf masking in f32
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_attn_params(cfg: ModelConfig, spec: LayerSpec, key, dtype) -> Dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd), dtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), dtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), dtype),
+        "wo": dense_init(ks[3], (hq * hd, d), dtype),
+    }
+    if spec.cross_attn:
+        p.update({
+            "xwq": dense_init(ks[4], (d, hq * hd), dtype),
+            "xwk": dense_init(ks[5], (d, hkv * hd), dtype),
+            "xwv": dense_init(ks[6], (d, hkv * hd), dtype),
+            "xwo": dense_init(ks[7], (hq * hd, d), dtype),
+        })
+    return p
+
+
+def init_mla_params(cfg: ModelConfig, key, dtype) -> Dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wdq": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), jnp.float32),
+        "wuq": dense_init(ks[1], (m.q_lora_rank, h * (dn + dr)), dtype),
+        "wdkv": dense_init(ks[2], (d, m.kv_lora_rank), dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), jnp.float32),
+        "wkr": dense_init(ks[3], (d, dr), dtype),
+        "wukv": dense_init(ks[4], (m.kv_lora_rank, h * (dn + dv)), dtype),
+        "wo": dense_init(ks[5], (h * dv, d), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cache layout
+# ---------------------------------------------------------------------------
+
+
+def attn_cache_len(cfg: ModelConfig, spec: LayerSpec, max_seq: int,
+                   swa_override: Optional[int] = None) -> int:
+    window = spec.window
+    if swa_override is not None and spec.mixer in ("attn",) and window is None:
+        window = swa_override
+    if window is None:
+        return max_seq
+    return min(window, max_seq)
+
+
+def init_attn_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_seq: int,
+                    dtype, swa_override: Optional[int] = None,
+                    enc_frames: Optional[int] = None) -> Dict:
+    c = attn_cache_len(cfg, spec, max_seq, swa_override)
+    if spec.mixer == "mla":
+        m = cfg.mla
+        cache = {
+            "ckv": jnp.zeros((batch, c, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, c, m.qk_rope_head_dim), dtype),
+        }
+    else:
+        cache = {
+            "k": jnp.zeros((batch, c, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, c, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+    if spec.cross_attn:
+        assert enc_frames is not None
+        cache["xk"] = jnp.zeros((batch, enc_frames, cfg.n_kv_heads, cfg.head_dim), dtype)
+        cache["xv"] = jnp.zeros((batch, enc_frames, cfg.n_kv_heads, cfg.head_dim), dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Score computation (GQA aware)
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,S,Hq,D), k: (B,T,Hkv,D) -> scores (B,S,Hq,T) in f32."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, s, hkv, g, d)
+    kf = k.astype(jnp.float32)
+    sc = jnp.einsum("bskgd,btkd->bskgt", qf, kf)
+    return sc.reshape(b, s, hq, k.shape[1])
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs: (B,S,Hq,T), v: (B,T,Hkv,Dv) -> (B,S,Hq,Dv)."""
+    b, s, hq, t = probs.shape
+    hkv = v.shape[2]
+    g = hq // hkv
+    pf = probs.reshape(b, s, hkv, g, t)
+    out = jnp.einsum("bskgt,btkd->bskgd", pf, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, v.shape[-1])
+
+
+def _masked_softmax(scores: jax.Array, mask: Optional[jax.Array]) -> jax.Array:
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def make_causal_mask(s: int, t: int, window: Optional[int],
+                     offset: int = 0) -> jax.Array:
+    """(1,S,1,T) mask: query i (global position offset+i) may see key j<=i
+    within the window."""
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(t)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    return m[None, :, None, :]
+
+
+# threshold above which the full-sequence XLA path switches to the
+# scan-chunked formulation (transient scores bq×T instead of S×T)
+CHUNKED_ATTN_THRESHOLD = 2048
+CHUNK_Q = 512
+
+
+def _chunked_causal_attention(q, k, v, scale, window, cap):
+    """Query-chunked causal attention: lax.scan over q blocks keeps the
+    score transient at (B, bq, Hq, T) — the pure-XLA analogue of the flash
+    kernel, used for long sequences on the dry-run path."""
+    b, s, hq, hd = q.shape
+    bq = CHUNK_Q
+    pad = (-s) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = (s + pad) // bq
+    qc = q.reshape(b, nb, bq, hq, hd).transpose(1, 0, 2, 3, 4)  # (nb,B,bq,H,hd)
+
+    def body(_, xs):
+        qb, ib = xs
+        offset = ib * bq
+        sc = _gqa_scores(qb, k) * scale               # (B,bq,Hq,T)
+        sc = softcap(sc, cap)
+        qi = offset + jnp.arange(bq)[:, None]
+        kj = jnp.arange(k.shape[1])[None, :]
+        m = kj <= qi
+        if window is not None:
+            m &= kj > qi - window
+        sc = jnp.where(m[None, :, None, :], sc, NEG_INF)
+        probs = jax.nn.softmax(sc, axis=-1)
+        return None, _gqa_out(probs, v)
+
+    _, out = jax.lax.scan(body, None, (qc, jnp.arange(nb)))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nb * bq, hq, -1)
+    return out[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence attention (training / prefill / encoder)
+# ---------------------------------------------------------------------------
+
+
+def attention_full(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    swa_override: Optional[int] = None,
+) -> jax.Array:
+    """Self-attention over a full sequence. Returns (B,S,D)."""
+    if spec.mixer == "mla":
+        return _mla_full(cfg, p, x, positions)
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    v = constrain(v, ("batch", "seq", "kv_heads", None))
+    if cfg.rope_mode in ("rope", "mrope"):
+        sections = cfg.mrope_sections if cfg.rope_mode == "mrope" else None
+        q = apply_rope(q, positions, cfg.rope_theta, sections)
+        k = apply_rope(k, positions, cfg.rope_theta, sections)
+    scale = cfg.query_scale if cfg.query_scale is not None else hd ** -0.5
+
+    window = spec.window
+    if swa_override is not None and window is None:
+        window = swa_override
+
+    if runtime.attention_impl() == "pallas" and causal:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(
+            q, k, v, scale=scale, window=window,
+            logit_cap=cfg.attn_logit_softcap, causal=True)
+    elif causal and s > CHUNKED_ATTN_THRESHOLD:
+        out = _chunked_causal_attention(q, k, v, scale, window,
+                                        cfg.attn_logit_softcap)
+    else:
+        scores = _gqa_scores(q, k) * scale
+        scores = softcap(scores, cfg.attn_logit_softcap)
+        mask = make_causal_mask(s, s, window) if causal else None
+        probs = _masked_softmax(scores, mask)
+        out = _gqa_out(probs, v)
+    out = out.astype(x.dtype).reshape(b, s, hq * hd)
+    return out @ p["wo"]
+
+
+def cross_attention_full(cfg: ModelConfig, p: Dict, x: jax.Array,
+                         enc_out: jax.Array) -> jax.Array:
+    """Decoder cross-attention over encoder output (B,T,D)."""
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["xwq"]).reshape(b, s, hq, hd)
+    k = (enc_out @ p["xwk"]).reshape(b, enc_out.shape[1], hkv, hd)
+    v = (enc_out @ p["xwv"]).reshape(b, enc_out.shape[1], hkv, hd)
+    scores = _gqa_scores(q, k) * hd ** -0.5
+    probs = _masked_softmax(scores, None)
+    out = _gqa_out(probs, v).astype(x.dtype).reshape(b, s, hq * hd)
+    return out @ p["xwo"]
+
+
+def cross_attention_kv(cfg: ModelConfig, p: Dict, enc_out: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    b, t, _ = enc_out.shape
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ p["xwk"]).reshape(b, t, hkv, hd)
+    v = (enc_out @ p["xwv"]).reshape(b, t, hkv, hd)
+    return k, v
+
+
+def _mla_full(cfg: ModelConfig, p: Dict, x: jax.Array,
+              positions: jax.Array) -> jax.Array:
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    qlat = rmsnorm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (qlat @ p["wuq"]).reshape(b, s, h, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    ckv = rmsnorm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)  # (B,S,r)
+    kr = apply_rope((x @ p["wkr"])[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]  # (B,S,dr)
+    kv = (ckv @ p["wukv"]).reshape(b, s, h, dn + dv)
+    kn, v = kv[..., :dn], kv[..., dn:]
+    scale = (dn + dr) ** -0.5
+
+    def block(qn_b, qr_b, offset, bq):
+        sc = jnp.einsum("bshd,bthd->bsht", qn_b.astype(jnp.float32),
+                        kn.astype(jnp.float32))
+        sc += jnp.einsum("bshd,btd->bsht", qr_b.astype(jnp.float32),
+                         kr.astype(jnp.float32))
+        sc *= scale
+        qi = offset + jnp.arange(bq)[:, None]
+        kj = jnp.arange(s)[None, :]
+        sc = jnp.where((kj <= qi)[None, :, None, :], sc, NEG_INF)
+        probs = jax.nn.softmax(sc, axis=-1)
+        return jnp.einsum("bsht,bthd->bshd", probs, v.astype(jnp.float32))
+
+    if s > CHUNKED_ATTN_THRESHOLD:
+        bq = CHUNK_Q
+        pad = (-s) % bq
+        qn_p = jnp.pad(qn, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else qn
+        qr_p = jnp.pad(qr, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else qr
+        nb = (s + pad) // bq
+        qn_c = qn_p.reshape(b, nb, bq, h, dn).transpose(1, 0, 2, 3, 4)
+        qr_c = qr_p.reshape(b, nb, bq, h, dr).transpose(1, 0, 2, 3, 4)
+
+        def body(_, xs):
+            qn_b, qr_b, ib = xs
+            return None, block(qn_b, qr_b, ib * bq, bq)
+
+        _, out = jax.lax.scan(body, None, (qn_c, qr_c, jnp.arange(nb)))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(b, nb * bq, h, dv)[:, :s]
+    else:
+        out = block(qn, qr, 0, s)
+    out = out.astype(x.dtype).reshape(b, s, h * dv)
+    return out @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full attention + cache write)
+# ---------------------------------------------------------------------------
+
+
+def attention_prefill(cfg, spec, p, x, positions, cache, *,
+                      swa_override=None, enc_out=None):
+    """Full causal attention; also fills the layer KV cache.
+
+    Tokens t ∈ [0, S) are written to ring slot t % C.
+    Returns (out, new_cache).
+    """
+    b, s, _ = x.shape
+    out = attention_full(cfg, spec, p, x, positions, causal=True,
+                         swa_override=swa_override)
+    new_cache = dict(cache)
+    if spec.mixer == "mla":
+        m = cfg.mla
+        ckv = rmsnorm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)
+        kr = apply_rope((x @ p["wkr"])[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+        new_cache["ckv"] = _ring_write_seq(cache["ckv"], ckv.astype(cache["ckv"].dtype))
+        new_cache["krope"] = _ring_write_seq(cache["krope"], kr.astype(cache["krope"].dtype))
+    else:
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim
+        k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+        v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+        if cfg.rope_mode in ("rope", "mrope"):
+            sections = cfg.mrope_sections if cfg.rope_mode == "mrope" else None
+            k = apply_rope(k, positions, cfg.rope_theta, sections)
+        new_cache["k"] = _ring_write_seq(cache["k"], k.astype(cache["k"].dtype))
+        new_cache["v"] = _ring_write_seq(cache["v"], v.astype(cache["v"].dtype))
+    if spec.cross_attn and enc_out is not None:
+        xk, xv = cross_attention_kv(cfg, p, enc_out)
+        new_cache["xk"] = xk.astype(cache["xk"].dtype)
+        new_cache["xv"] = xv.astype(cache["xv"].dtype)
+    return out, new_cache
+
+
+def _ring_write_seq(buf: jax.Array, vals: jax.Array) -> jax.Array:
+    """Write a full sequence (B,S,...) into a ring buffer (B,C,...):
+    token t -> slot t % C. When S <= C this is a plain prefix write."""
+    c = buf.shape[1]
+    s = vals.shape[1]
+    if s <= c:
+        return jax.lax.dynamic_update_slice_in_dim(buf, vals, 0, axis=1)
+    # keep the last C tokens, rotated so that token t sits at slot t % C
+    tail = vals[:, s - c:]
+    start = (s - c) % c
+    rolled = jnp.roll(tail, shift=start, axis=1)
+    return rolled
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token vs cache)
+# ---------------------------------------------------------------------------
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: Dict,
+    x: jax.Array,           # (B, 1, D)
+    pos: jax.Array,         # scalar int32: index of the token being written
+    positions: jax.Array,   # (B, 1) or (3, B, 1) rope positions of this token
+    cache: Dict,
+    *,
+    swa_override: Optional[int] = None,
+) -> Tuple[jax.Array, Dict]:
+    if spec.mixer == "mla":
+        return _mla_decode(cfg, p, x, pos, positions, cache)
+    b, _, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    c = cache["k"].shape[1]
+    q = (x @ p["wq"]).reshape(b, 1, hq, hd)
+    k = (x @ p["wk"]).reshape(b, 1, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, 1, hkv, hd)
+    if cfg.rope_mode in ("rope", "mrope"):
+        sections = cfg.mrope_sections if cfg.rope_mode == "mrope" else None
+        q = apply_rope(q, positions, cfg.rope_theta, sections)
+        k = apply_rope(k, positions, cfg.rope_theta, sections)
+    slot = jnp.mod(pos, c)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    scale = cfg.query_scale if cfg.query_scale is not None else hd ** -0.5
+    scores = _gqa_scores(q, new_k) * scale       # (B,1,Hq,C)
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    valid = _ring_valid_mask(pos, c)             # (C,)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, new_v).astype(x.dtype).reshape(b, 1, hq * hd)
+    out = out @ p["wo"]
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = new_k, new_v
+    return out, new_cache
+
+
+def cross_attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict) -> jax.Array:
+    b, _, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["xwq"]).reshape(b, 1, hq, hd)
+    scores = _gqa_scores(q, cache["xk"]) * hd ** -0.5
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, cache["xv"]).astype(x.dtype).reshape(b, 1, hq * hd)
+    return out @ p["xwo"]
+
+
+def _ring_valid_mask(pos: jax.Array, c: int) -> jax.Array:
+    """Which ring slots hold live tokens once token ``pos`` is written.
+
+    Slot j holds token t_j = pos - ((pos - j) mod C); valid iff t_j >= 0.
+    For a full (non-ring) cache this reduces to j <= pos.
+    """
+    j = jnp.arange(c)
+    t = pos - jnp.mod(pos - j, c)
+    return t >= 0
+
+
+def _mla_decode(cfg, p, x, pos, positions, cache):
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    c = cache["ckv"].shape[1]
+    qlat = rmsnorm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (qlat @ p["wuq"]).reshape(b, 1, h, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    ckv_t = rmsnorm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)
+    kr_t = apply_rope((x @ p["wkr"])[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    slot = jnp.mod(pos, c)
+    new_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_t.astype(cache["ckv"].dtype), slot, axis=1)
+    new_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["krope"], kr_t.astype(cache["krope"].dtype), slot, axis=1)
+    kv = (new_ckv @ p["wukv"]).reshape(b, c, h, dn + dv)
+    kn, v = kv[..., :dn], kv[..., dn:]
+    scale = (dn + dr) ** -0.5
+    sc = jnp.einsum("bshd,bthd->bsht", qn.astype(jnp.float32), kn.astype(jnp.float32))
+    sc += jnp.einsum("bshd,btd->bsht", qr.astype(jnp.float32), new_kr.astype(jnp.float32))
+    sc *= scale
+    valid = _ring_valid_mask(pos, c)
+    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    probs = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bsht,bthd->bshd", probs, v.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, 1, h * dv)
+    out = out @ p["wo"]
+    new_cache = dict(cache)
+    new_cache["ckv"], new_cache["krope"] = new_ckv, new_kr
+    return out, new_cache

@@ -1,0 +1,119 @@
+"""Shared building blocks: norms, rotary embeddings (RoPE / M-RoPE), init."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, in_axis: int = 0):
+    """Truncated-normal fan-in init (MaxText-style)."""
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale) parameterisation keeps zero-init neutral
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def norm_params(cfg: ModelConfig, key) -> dict:
+    if cfg.norm == "layernorm":
+        return {
+            "scale": jnp.zeros((cfg.d_model,), jnp.float32),
+            "bias": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    return {"scale": jnp.zeros((cfg.d_model,), jnp.float32)}
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for rotary embedding, shape (head_dim // 2,)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    mrope_sections: Optional[Tuple[int, int, int]] = None,
+) -> jax.Array:
+    """Rotate ``x`` of shape (..., S, H, D) by ``positions``.
+
+    positions: (B, S) for standard RoPE, or (3, B, S) for M-RoPE
+    [arXiv:2409.12191] where the three planes carry temporal/height/width
+    coordinates and ``mrope_sections`` partitions the D//2 frequency channels.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    inv = rope_freqs(d, theta)  # (half,)
+    if mrope_sections is not None:
+        assert positions.ndim == 3 and positions.shape[0] == 3, positions.shape
+        assert sum(mrope_sections) == half, (mrope_sections, half)
+        # per-channel section id -> select the matching position plane
+        sec_id = jnp.repeat(
+            jnp.arange(3), jnp.array(mrope_sections), total_repeat_length=half
+        )  # (half,)
+        sec_onehot = jax.nn.one_hot(sec_id, 3, dtype=jnp.float32)  # (half, 3)
+        pos = positions.astype(jnp.float32)  # (3, B, S)
+        ang_all = pos[..., None] * inv[None, None, None, :]  # (3, B, S, half)
+        ang = jnp.einsum("pbsh,hp->bsh", ang_all, sec_onehot)  # (B, S, half)
+    else:
+        pos = positions.astype(jnp.float32)  # (B, S)
+        ang = pos[..., None] * inv[None, None, :]  # (B, S, half)
+    sin = jnp.sin(ang)[..., None, :]  # (B, S, 1, half)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,43 @@
+"""Feed-forward blocks: SwiGLU and GELU MLPs."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+from repro.sharding.rules import constrain
+
+
+def init_swiglu_params(cfg: ModelConfig, key, dtype) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, f), dtype),
+        "w_up": dense_init(k2, (d, f), dtype),
+        "w_down": dense_init(k3, (f, d), dtype),
+    }
+
+
+def init_gelu_params(cfg: ModelConfig, key, dtype) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_in": dense_init(k1, (d, f), dtype),
+        "w_out": dense_init(k2, (f, d), dtype),
+    }
+
+
+def swiglu(p: Dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return h @ p["w_down"]
+
+
+def gelu_mlp(p: Dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ p["w_in"], approximate=True)
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return h @ p["w_out"]

@@ -1,0 +1,24 @@
+"""Per-process model-runtime knobs (attention backend selection, remat)."""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+# "xla"  — pure-jnp attention/SSD (reference path; used for dry-run lowering)
+# "pallas" — Pallas TPU kernels (interpret=True on CPU) for the hot paths
+_attn_impl = contextvars.ContextVar("repro_attn_impl", default="xla")
+
+
+def attention_impl() -> str:
+    return _attn_impl.get()
+
+
+@contextlib.contextmanager
+def use_attention_impl(name: str):
+    assert name in ("xla", "pallas"), name
+    tok = _attn_impl.set(name)
+    try:
+        yield
+    finally:
+        _attn_impl.reset(tok)

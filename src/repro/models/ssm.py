@@ -1,0 +1,273 @@
+"""Mamba2 (SSD — state-space duality) mixer [arXiv:2405.21060].
+
+Full-sequence path uses the chunked SSD algorithm (intra-chunk quadratic
+blocks + inter-chunk state recurrence); the decode path is the O(1)
+per-token recurrence. Both share parameters and agree numerically
+(tests/test_ssm.py asserts full-vs-recurrent equivalence).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rmsnorm
+from repro.sharding.rules import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params & cache
+# ---------------------------------------------------------------------------
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_ssm_heads(cfg.d_model)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    return s, di, nh, conv_dim
+
+
+def init_mamba_params(cfg: ModelConfig, key, dtype) -> Dict:
+    s, di, nh, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    in_dim = 2 * di + 2 * s.n_groups * s.d_state + nh
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    # dt bias such that softplus(dt_bias) spans ~[1e-3, 1e-1] (mamba default)
+    u = jax.random.uniform(k3, (nh,), jnp.float32)
+    dt_init = jnp.exp(u * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    a_init = jnp.log(1.0 + 15.0 * jax.random.uniform(k4, (nh,), jnp.float32))
+    return {
+        "in_proj": dense_init(k1, (d, in_dim), dtype),
+        "conv_w": 0.1 * jax.random.normal(k2, (s.d_conv, conv_dim), jnp.float32).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": a_init,
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias,
+        "gate_norm": jnp.zeros((di,), jnp.float32),
+        "out_proj": dense_init(k5, (di, d), dtype),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    s, di, nh, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, conv_dim, s.d_conv - 1), dtype),
+        "ssm": jnp.zeros((batch, nh, s.headdim, s.d_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def segsum(a: jax.Array) -> jax.Array:
+    """(..., L) -> (..., L, L); out[i, j] = sum_{k=j+1..i} a_k for i>=j else -inf."""
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ln = a.shape[-1]
+    mask = jnp.arange(ln)[:, None] >= jnp.arange(ln)[None, :]
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def ssd_chunked(
+    x: jax.Array,    # (B, S, H, P)   already scaled by dt
+    a: jax.Array,    # (B, S, H)      = dt * A   (negative)
+    b_mat: jax.Array,  # (B, S, H, N)
+    c_mat: jax.Array,  # (B, S, H, N)
+    chunk: int,
+    init_state: jax.Array = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    bc = b_mat.reshape(bsz, nc, chunk, h, n).astype(jnp.float32)
+    cc = c_mat.reshape(bsz, nc, chunk, h, n).astype(jnp.float32)
+    ac = a.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2).astype(jnp.float32)  # (B,H,C,L)
+    a_cumsum = jnp.cumsum(ac, axis=-1)                                 # (B,H,C,L)
+
+    # 1) intra-chunk (diagonal blocks)
+    l_mat = jnp.exp(segsum(ac))                                        # (B,H,C,L,L)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", cc, bc, l_mat, xc)
+
+    # 2) per-chunk final states
+    decay_states = jnp.exp(a_cumsum[..., -1:] - a_cumsum)              # (B,H,C,L)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", bc, decay_states, xc)
+
+    # 3) inter-chunk recurrence
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+    states = jnp.concatenate([init_state[:, None].transpose(0, 1, 2, 3, 4), states], axis=1)
+    chunk_sums = jnp.pad(a_cumsum[..., -1], ((0, 0), (0, 0), (1, 0)))  # (B,H,C+1)
+    decay_chunk = jnp.exp(segsum(chunk_sums))                          # (B,H,C+1,C+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4) state -> output
+    state_decay_out = jnp.exp(a_cumsum)                                # (B,H,C,L)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", cc, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (K, C) depthwise causal conv via shifted adds."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+
+def _project(cfg: ModelConfig, p: Dict, x: jax.Array):
+    s, di, nh, conv_dim = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + conv_dim]
+    dt_raw = zxbcdt[..., di + conv_dim :]
+    return z, xbc, dt_raw
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jax.Array):
+    s, di, nh, conv_dim = _dims(cfg)
+    g, n = s.n_groups, s.d_state
+    xs = xbc[..., :di]
+    b_mat = xbc[..., di : di + g * n]
+    c_mat = xbc[..., di + g * n :]
+    shape = xbc.shape[:-1]
+    heads_per_group = nh // g
+    b_mat = b_mat.reshape(*shape, g, n)
+    c_mat = c_mat.reshape(*shape, g, n)
+    # broadcast groups to heads
+    b_mat = jnp.repeat(b_mat, heads_per_group, axis=-2)
+    c_mat = jnp.repeat(c_mat, heads_per_group, axis=-2)
+    return xs, b_mat, c_mat
+
+
+def mamba_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
+                  use_kernel: Optional[bool] = None) -> jax.Array:
+    """Full-sequence Mamba2 block. x: (B, S, D) -> (B, S, D)."""
+    if use_kernel is None:
+        from repro.models import runtime
+        use_kernel = runtime.attention_impl() == "pallas"
+    s_cfg, di, nh, conv_dim = _dims(cfg)
+    bsz, slen, _ = x.shape
+    z, xbc, dt_raw = _project(cfg, p, x)
+    xbc = jax.nn.silu(causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs, b_mat, c_mat = _split_xbc(cfg, xbc)
+    xs = xs.reshape(bsz, slen, nh, s_cfg.headdim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])    # (B,S,H)
+    a = -jnp.exp(p["A_log"])                                           # (H,)
+    x_dt = xs.astype(jnp.float32) * dt[..., None]
+    a_dt = dt * a[None, None, :]
+    # pad sequence to a chunk multiple
+    chunk = min(s_cfg.chunk_size, slen)
+    pad = (-slen) % chunk
+    if pad:
+        x_dt = jnp.pad(x_dt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_dt = jnp.pad(a_dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, _ = kops.ssd_scan(x_dt, a_dt, b_mat, c_mat, chunk)
+    else:
+        y, _ = ssd_chunked(x_dt, a_dt, b_mat, c_mat, chunk)
+    y = y[:, :slen]
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, slen, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(y.astype(x.dtype), p["gate_norm"], cfg.norm_eps)
+    y = constrain(y, ("batch", "seq", "ssm_inner"))
+    return y @ p["out_proj"]
+
+
+def mamba_prefill(cfg: ModelConfig, p: Dict, x: jax.Array,
+                  cache: Dict) -> Tuple[jax.Array, Dict]:
+    """Full-sequence forward that also produces the recurrent cache."""
+    s_cfg, di, nh, conv_dim = _dims(cfg)
+    bsz, slen, _ = x.shape
+    z, xbc, dt_raw = _project(cfg, p, x)
+    xbc_conv = jax.nn.silu(causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs, b_mat, c_mat = _split_xbc(cfg, xbc_conv)
+    xs = xs.reshape(bsz, slen, nh, s_cfg.headdim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    x_dt = xs.astype(jnp.float32) * dt[..., None]
+    a_dt = dt * a[None, None, :]
+    chunk = min(s_cfg.chunk_size, slen)
+    pad = (-slen) % chunk
+    if pad:
+        x_dt = jnp.pad(x_dt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_dt = jnp.pad(a_dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, final_state = ssd_chunked(x_dt, a_dt, b_mat, c_mat, chunk)
+    y = y[:, :slen]
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, slen, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(y.astype(x.dtype), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    # conv cache: last (d_conv - 1) *pre-activation* conv inputs
+    k = s_cfg.d_conv - 1
+    tail = xbc[:, -k:, :] if slen >= k else jnp.pad(xbc, ((0, 0), (k - slen, 0), (0, 0)))
+    new_cache = {
+        "conv": tail.transpose(0, 2, 1).astype(cache["conv"].dtype),
+        "ssm": final_state,
+    }
+    return out, new_cache
+
+
+def mamba_decode(cfg: ModelConfig, p: Dict, x: jax.Array,
+                 cache: Dict) -> Tuple[jax.Array, Dict]:
+    """Single-token recurrent step. x: (B, 1, D)."""
+    s_cfg, di, nh, conv_dim = _dims(cfg)
+    bsz = x.shape[0]
+    z, xbc, dt_raw = _project(cfg, p, x)           # (B,1,·)
+    z, xbc, dt_raw = z[:, 0], xbc[:, 0], dt_raw[:, 0]
+    # conv over the stored window + current token
+    window = jnp.concatenate([cache["conv"], xbc[:, :, None].astype(cache["conv"].dtype)
+                              .transpose(0, 1, 2)], axis=2)  # (B, C, K)
+    w = p["conv_w"].astype(jnp.float32)            # (K, C)
+    conv_out = jnp.sum(window.astype(jnp.float32) * w.T[None], axis=-1) + p["conv_b"].astype(jnp.float32)
+    xbc_act = jax.nn.silu(conv_out).astype(x.dtype)  # (B, C)
+    xs, b_mat, c_mat = _split_xbc(cfg, xbc_act)
+    xs = xs.reshape(bsz, nh, s_cfg.headdim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a[None, :])                   # (B,H)
+    state = cache["ssm"] * da[..., None, None]
+    state = state + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, b_mat.astype(jnp.float32), xs.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", c_mat.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(y.astype(x.dtype), p["gate_norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    new_cache = {"conv": window[..., 1:], "ssm": state}
+    return out, new_cache

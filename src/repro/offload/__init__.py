@@ -1,0 +1,24 @@
+"""JAX-native HyperOffload runtime integration.
+
+Three concrete lowerings of the paper's cache operators onto mechanisms XLA
+already understands (DESIGN.md §2):
+
+- ``policies``  — activation offload via offload-aware rematerialization
+  policies (checkpoint_name'd residuals → ``pinned_host``), §5.1 case 1;
+- ``optstate``  — optimizer-state host offload via memory-kind shardings,
+  §5.1 case 2;
+- ``kvcache``   — paged KV cache with a host-side pool and double-buffered
+  block prefetch for decode, §5.2.
+"""
+
+from repro.offload.policies import offload_remat_policy, remat_policy
+from repro.offload.optstate import host_offload_state, device_fetch_state
+from repro.offload.kvcache import PagedKVCache
+
+__all__ = [
+    "offload_remat_policy",
+    "remat_policy",
+    "host_offload_state",
+    "device_fetch_state",
+    "PagedKVCache",
+]

@@ -1,0 +1,202 @@
+"""Paged KV cache with a host-side (remote-pool) page store (§5.2).
+
+Layout per layer: each full page is its own buffer in the pool
+(``pinned_host`` memory — pages are non-contiguous by construction, exactly
+like a paged allocator); the device keeps (a) a small *tail* buffer
+accumulating the current partial page and (b) per-page key *summaries*
+(mean key per page) used for sparse block selection — the paper's
+DeepSeek+NSA inference setting, where only the top-k relevant KV blocks are
+reloaded per decode step instead of the whole cache.
+
+Decode attention runs in two segments — selected pool pages + device tail —
+merged in a single softmax, so selecting *all* pages reproduces dense
+attention against the oracle (tests/test_offload_runtime.py).
+
+The page fetch (``jax.device_put`` of host pages) is the Prefetch cache
+operator; the page flush on tail overflow is the Store. The serving engine
+can issue next-layer fetches while the current layer computes, matching
+the graph-driven overlap the compiler plans.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.3819763e38
+
+
+def _host_sharding():
+    d = jax.devices()[0]
+    return jax.sharding.SingleDeviceSharding(d, memory_kind="pinned_host")
+
+
+def _dev_sharding():
+    return jax.sharding.SingleDeviceSharding(jax.devices()[0])
+
+
+@jax.jit
+def _page_summary(k_page: jax.Array) -> jax.Array:
+    """(B, page, Hkv, D) -> (B, Hkv, D) mean key."""
+    return jnp.mean(k_page, axis=1)
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """One attention layer's paged cache. ``n_layers`` instances make a model."""
+
+    page_size: int
+    n_pages: int               # pool capacity in pages
+    batch: int
+    n_kv_heads: int
+    head_dim: int
+    dtype: jnp.dtype
+
+    k_pool: List[Optional[jax.Array]]   # per page: (B, page, Hkv, D) pinned_host
+    v_pool: List[Optional[jax.Array]]
+    k_summary: jax.Array       # (n_pages, B, Hkv, D) — device
+    k_tail: jax.Array          # (B, page, Hkv, D) — device (partial page)
+    v_tail: jax.Array
+    length: int = 0            # tokens appended so far
+    fetches: int = 0           # pool→device page transfers (stats)
+    flushes: int = 0           # device→pool page stores
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def create(cls, *, batch: int, max_seq: int, page_size: int,
+               n_kv_heads: int, head_dim: int, dtype=jnp.float32) -> "PagedKVCache":
+        n_pages = -(-max_seq // page_size)
+        return cls(
+            page_size=page_size, n_pages=n_pages, batch=batch,
+            n_kv_heads=n_kv_heads, head_dim=head_dim, dtype=dtype,
+            k_pool=[None] * n_pages, v_pool=[None] * n_pages,
+            k_summary=jnp.zeros((n_pages, batch, n_kv_heads, head_dim), dtype),
+            k_tail=jnp.zeros((batch, page_size, n_kv_heads, head_dim), dtype),
+            v_tail=jnp.zeros((batch, page_size, n_kv_heads, head_dim), dtype),
+        )
+
+    @property
+    def full_pages(self) -> int:
+        return self.length // self.page_size
+
+    @property
+    def tail_len(self) -> int:
+        return self.length % self.page_size
+
+    # ------------------------------------------------------------------
+    def _flush_tail(self) -> None:
+        """Store: commit the full tail page to the pool + update summary."""
+        page_idx = self.length // self.page_size - 1
+        host = _host_sharding()
+        self.k_pool[page_idx] = jax.device_put(self.k_tail, host)
+        self.v_pool[page_idx] = jax.device_put(self.v_tail, host)
+        self.k_summary = self.k_summary.at[page_idx].set(
+            _page_summary(self.k_tail))
+        self.flushes += 1
+
+    def append(self, k_t: jax.Array, v_t: jax.Array) -> None:
+        """Append one token's K/V: (B, Hkv, D)."""
+        i = self.tail_len
+        self.k_tail = self.k_tail.at[:, i].set(k_t.astype(self.dtype))
+        self.v_tail = self.v_tail.at[:, i].set(v_t.astype(self.dtype))
+        self.length += 1
+        if self.length % self.page_size == 0:
+            self._flush_tail()
+
+    def prefill(self, k_seq: jax.Array, v_seq: jax.Array) -> None:
+        """Bulk-append a prompt: (B, S, Hkv, D)."""
+        s = k_seq.shape[1]
+        host = _host_sharding()
+        n_full = s // self.page_size
+        for pi in range(n_full):
+            sl = slice(pi * self.page_size, (pi + 1) * self.page_size)
+            kp = k_seq[:, sl].astype(self.dtype)
+            vp = v_seq[:, sl].astype(self.dtype)
+            self.k_pool[pi] = jax.device_put(kp, host)
+            self.v_pool[pi] = jax.device_put(vp, host)
+            self.k_summary = self.k_summary.at[pi].set(_page_summary(kp))
+            self.flushes += 1
+        rem = s - n_full * self.page_size
+        if rem:
+            self.k_tail = self.k_tail.at[:, :rem].set(
+                k_seq[:, n_full * self.page_size:].astype(self.dtype))
+            self.v_tail = self.v_tail.at[:, :rem].set(
+                v_seq[:, n_full * self.page_size:].astype(self.dtype))
+        self.length = s
+
+    # ------------------------------------------------------------------
+    def select_pages(self, q: jax.Array, top_k: Optional[int]) -> np.ndarray:
+        """Sparse block selection: rank full pages by mean-key relevance to
+        the query (B, Hq, D) → sorted page indices (host ints)."""
+        n = self.full_pages
+        if n == 0:
+            return np.zeros((0,), np.int64)
+        if top_k is None or top_k >= n:
+            return np.arange(n)
+        summ = self.k_summary[:n]                     # (n, B, Hkv, D)
+        qm = jnp.mean(q.astype(jnp.float32), axis=(0, 1))   # (D,)
+        scores = jnp.einsum("nbhd,d->n", summ.astype(jnp.float32), qm)
+        idx = np.asarray(jax.lax.top_k(scores, top_k)[1])
+        return np.sort(idx)
+
+    def fetch_pages(self, idx: np.ndarray) -> Tuple[jax.Array, jax.Array]:
+        """Prefetch: copy the selected pool pages to device memory. Returns
+        (n_sel, B, page, Hkv, D) device arrays."""
+        dev = _dev_sharding()
+        if len(idx) == 0:
+            shape = (0, self.batch, self.page_size, self.n_kv_heads, self.head_dim)
+            return jnp.zeros(shape, self.dtype), jnp.zeros(shape, self.dtype)
+        ks = [jax.device_put(self.k_pool[int(i)], dev) for i in idx]
+        vs = [jax.device_put(self.v_pool[int(i)], dev) for i in idx]
+        self.fetches += len(idx)
+        return jnp.stack(ks), jnp.stack(vs)
+
+    # ------------------------------------------------------------------
+    def attend(self, q: jax.Array, *, scale: float,
+               top_k_pages: Optional[int] = None,
+               prefetched: Optional[Tuple[jax.Array, jax.Array, np.ndarray]] = None,
+               ) -> jax.Array:
+        """Decode attention of q (B, Hq, D) over selected pages + tail.
+        ``prefetched`` lets the engine overlap next-layer fetches."""
+        if prefetched is not None:
+            kp, vp, idx = prefetched
+        else:
+            idx = self.select_pages(q, top_k_pages)
+            kp, vp = self.fetch_pages(idx)
+        return _paged_attend(q, kp, vp, self.k_tail, self.v_tail,
+                             jnp.int32(self.tail_len), scale)
+
+
+@jax.jit
+def _segment_scores(q, k, scale):
+    """q (B,Hq,D), k (B,T,Hkv,D) -> scores (B,Hq,T) in f32 (GQA aware)."""
+    b, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d) * scale
+    return jnp.einsum("bkgd,btkd->bkgt", qf, k.astype(jnp.float32)).reshape(
+        b, hq, k.shape[1])
+
+
+@jax.jit
+def _paged_attend(q, k_pages, v_pages, k_tail, v_tail, tail_len, scale):
+    """Exact attention over [pages ++ tail] in one merged softmax."""
+    b, hq, d = q.shape
+    n, _, page, hkv, _ = k_pages.shape
+    k_flat = k_pages.transpose(1, 0, 2, 3, 4).reshape(b, n * page, hkv, d)
+    v_flat = v_pages.transpose(1, 0, 2, 3, 4).reshape(b, n * page, hkv, d)
+    s_pages = _segment_scores(q, k_flat, scale)              # (B,Hq,n*page)
+    s_tail = _segment_scores(q, k_tail, scale)               # (B,Hq,page)
+    t_mask = jnp.arange(k_tail.shape[1]) < tail_len
+    s_tail = jnp.where(t_mask[None, None, :], s_tail, NEG_INF)
+    s = jnp.concatenate([s_pages, s_tail], axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    v_all = jnp.concatenate([v_flat, v_tail], axis=1)        # (B,T,Hkv,D)
+    g = hq // hkv
+    pf = p.reshape(b, hkv, g, -1)
+    out = jnp.einsum("bkgt,btkd->bkgd", pf, v_all.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)

@@ -1,0 +1,64 @@
+"""Optimizer-state host offload via memory-kind shardings (§5.1 case 2).
+
+Optimizer moments are touched once per step; HyperOffload parks them in the
+remote pool between updates. In JAX this is a sharding whose
+``memory_kind`` is ``pinned_host``: the train step receives host-resident
+moments, XLA copies them in before the update and the new moments are
+committed back to host by the output sharding — the Prefetch/Store pair at
+the optimizer-update node of the IR trace.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec, SingleDeviceSharding
+
+
+def _with_memory_kind(sharding, kind: str):
+    if hasattr(sharding, "with_memory_kind"):
+        return sharding.with_memory_kind(kind)
+    raise TypeError(f"sharding {sharding} has no memory kinds")
+
+
+def host_shardings(tree: Any, kind: str = "pinned_host") -> Any:
+    """Map each array's current sharding to the host memory kind."""
+    return jax.tree.map(
+        lambda x: _with_memory_kind(x.sharding, kind), tree)
+
+
+def host_offload_state(state: Any, kind: str = "pinned_host") -> Any:
+    """Move a pytree of arrays to host memory (Store + Detach)."""
+    return jax.tree.map(
+        lambda x: jax.device_put(x, _with_memory_kind(x.sharding, kind)),
+        state)
+
+
+def device_fetch_state(state: Any, kind: str = "device") -> Any:
+    """Bring a host-parked pytree back to device memory (Prefetch)."""
+    return jax.tree.map(
+        lambda x: jax.device_put(x, _with_memory_kind(x.sharding, kind)),
+        state)
+
+
+# -- in-jit variants ---------------------------------------------------------
+# Inside a jitted step, abstract values carry a memory space but no concrete
+# sharding to mutate; transfers use explicit target shardings instead.
+
+
+def _default_shardings(kind: str):
+    dev = jax.devices()[0]
+    return SingleDeviceSharding(dev, memory_kind=kind)
+
+
+def fetch_in_jit(state: Any, sharding=None) -> Any:
+    """Prefetch a host-parked pytree inside a jitted computation."""
+    s = sharding if sharding is not None else _default_shardings("device")
+    return jax.tree.map(lambda x: jax.device_put(x, s), state)
+
+
+def park_in_jit(state: Any, sharding=None) -> Any:
+    """Store a pytree to host memory inside a jitted computation."""
+    s = sharding if sharding is not None else _default_shardings("pinned_host")
+    return jax.tree.map(lambda x: jax.device_put(x, s), state)

@@ -1,0 +1,43 @@
+"""Activation-offload rematerialization policies (§5.1 case 1).
+
+The model substrate tags activations with ``checkpoint_name``:
+"resid" (per-layer residual stream), "attn_out", "mlp_out". The offload
+policy keeps the tagged values across fwd→bwd but parks them in
+``pinned_host`` memory — XLA emits the device→host copy after the producer
+and the host→device copy before the backward consumer, i.e. exactly the
+Store/Prefetch pair HyperOffload's IR models, scheduled by XLA's
+latency-hiding scheduler on real hardware.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+OFFLOADABLE_NAMES = ("resid", "attn_out", "mlp_out")
+
+
+def remat_policy(name: str = "nothing"):
+    """Plain (non-offloading) remat policies for the baseline."""
+    if name == "nothing":
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "everything":
+        return jax.checkpoint_policies.everything_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    if name == "save_resid":
+        return jax.checkpoint_policies.save_only_these_names("resid")
+    raise ValueError(name)
+
+
+def offload_remat_policy(names: Sequence[str] = ("resid",),
+                         offload_dst: str = "pinned_host"):
+    """Offload the named activations to host memory instead of keeping them
+    in HBM or recomputing them."""
+    return jax.checkpoint_policies.save_and_offload_only_these_names(
+        names_which_can_be_saved=[],
+        names_which_can_be_offloaded=list(names),
+        offload_src="device",
+        offload_dst=offload_dst,
+    )

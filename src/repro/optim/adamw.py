@@ -1,0 +1,65 @@
+"""AdamW, from scratch (no optax dependency).
+
+Moments are kept in f32 regardless of parameter dtype. The state is a plain
+pytree, so HyperOffload's optimizer-state offload (offload.optstate) can
+park it in host memory between steps with a single ``device_put``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array       # scalar int32
+    mu: Any               # first moments (f32 pytree)
+    nu: Any               # second moments (f32 pytree)
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Tuple[Any, AdamWState]:
+    """Returns (new_params, new_state)."""
+    # global-norm clip in f32
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(g32)))
+    clip = jnp.minimum(1.0, grad_clip / (gn + 1e-9))
+    g32 = jax.tree.map(lambda g: g * clip, g32)
+
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, g32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)

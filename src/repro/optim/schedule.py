@@ -1,0 +1,15 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float = 3e-4, warmup: int = 100,
+                    total: int = 10_000, floor: float = 0.1):
+    """Linear warmup → cosine decay to ``floor``·peak."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(1.0, step / max(warmup, 1))
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, peak_lr * cos)

@@ -1,0 +1,9 @@
+from repro.roofline.analysis import (
+    RooflineTerms,
+    collective_bytes,
+    model_flops,
+    roofline_from_compiled,
+)
+
+__all__ = ["RooflineTerms", "collective_bytes", "model_flops",
+           "roofline_from_compiled"]

@@ -1,0 +1,4 @@
+from repro.serving.engine import ServeEngine
+from repro.serving.sampling import sample_token
+
+__all__ = ["ServeEngine", "sample_token"]

@@ -1,0 +1,22 @@
+"""Token sampling: greedy / temperature / top-k."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_token(logits: jax.Array, key: Optional[jax.Array] = None, *,
+                 temperature: float = 0.0, top_k: Optional[int] = None) -> jax.Array:
+    """logits (B, V) -> token ids (B,)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert key is not None
+    lg = logits.astype(jnp.float32) / temperature
+    if top_k is not None:
+        vals, _ = jax.lax.top_k(lg, top_k)
+        cutoff = vals[..., -1:]
+        lg = jnp.where(lg < cutoff, -jnp.inf, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -1,0 +1,19 @@
+from repro.sharding.rules import (
+    AxisRules,
+    DEFAULT_RULES,
+    MULTIPOD_RULES,
+    axis_rules,
+    constrain,
+    current_rules,
+    logical_spec,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "MULTIPOD_RULES",
+    "axis_rules",
+    "constrain",
+    "current_rules",
+    "logical_spec",
+]

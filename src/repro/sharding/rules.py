@@ -1,0 +1,166 @@
+"""Divisibility-safe logical→physical sharding rules.
+
+Model code annotates tensors with *logical* axis names ("batch", "embed",
+"mlp", "heads", "kv_heads", "vocab", "seq", "experts", ...). A rule-set maps
+each logical name to zero or more mesh axes. ``logical_spec`` resolves names
+to a ``PartitionSpec``, silently dropping any mesh axis that does not evenly
+divide the corresponding dimension — GQA kv=8 on a 16-way model axis, 40
+experts on a 16-way axis, batch=1 decode, etc. all degrade gracefully to
+replication instead of failing to lower.
+
+This is the 2-D FSDP×TP scheme from DESIGN.md §6:
+  - "fsdp"-ish sharding over the ``data`` axis (d_model / vocab rows)
+  - tensor parallelism over the ``model`` axis (heads / d_ff / vocab cols)
+  - batch over ``("pod", "data")`` when the pod axis exists
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+AxisRules = Dict[str, MeshAxes]
+
+# Single-pod production mesh: ("data", "model") = (16, 16).
+DEFAULT_RULES: AxisRules = {
+    "batch": ("data",),
+    "seq": None,
+    "embed": ("data",),          # fsdp: shard the d_model rows of weights
+    "embed_act": None,           # activations keep d_model replicated
+    "seq_act": None,             # sequence parallelism: the residual stream's
+                                 # seq dim shards over "model" at layer
+                                 # boundaries when the launcher enables it
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "q_dim": ("model",),
+    "kv_dim": ("model",),
+    "vocab": ("model",),
+    "experts": None,             # 40/8 experts do not divide 16; see DESIGN.md
+    "expert_mlp": ("model",),
+    "cache_seq": None,
+    "cache_batch": ("data",),
+    "cache_heads": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_state": None,
+    "layers": None,
+    "lora": None,
+    "frames": None,
+}
+
+# Two-pod mesh: ("pod", "data", "model") — batch additionally over pods,
+# weights replicated across pods (data-parallel pods).
+MULTIPOD_RULES: AxisRules = dict(
+    DEFAULT_RULES,
+    batch=("pod", "data"),
+    cache_batch=("pod", "data"),
+)
+
+_active_rules: contextvars.ContextVar[Optional[AxisRules]] = contextvars.ContextVar(
+    "repro_axis_rules", default=None
+)
+_active_mesh: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None
+)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: AxisRules, mesh: Optional[Mesh] = None):
+    """Activate a logical-axis rule-set (and optionally a mesh) for model code."""
+    t1 = _active_rules.set(rules)
+    t2 = _active_mesh.set(mesh)
+    try:
+        yield
+    finally:
+        _active_rules.reset(t1)
+        _active_mesh.reset(t2)
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _active_rules.get()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _active_mesh.get()
+
+
+def _mesh_axis_size(mesh: Optional[Mesh], axes: Tuple[str, ...]) -> int:
+    if mesh is None:
+        return 1
+    n = 1
+    for a in axes:
+        n *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    return n
+
+
+def logical_spec(
+    dims: Sequence[int],
+    names: Sequence[Optional[str]],
+    rules: Optional[AxisRules] = None,
+    mesh: Optional[Mesh] = None,
+) -> P:
+    """Resolve logical axis names for a shape to a PartitionSpec.
+
+    Mesh axes that do not evenly divide the dimension are dropped. An axis
+    already consumed by an earlier dimension is dropped too (PartitionSpec
+    must not repeat mesh axes).
+    """
+    rules = rules if rules is not None else (current_rules() or {})
+    mesh = mesh if mesh is not None else current_mesh()
+    used = set()
+    parts = []
+    for dim, name in zip(dims, names):
+        if name is None:
+            parts.append(None)
+            continue
+        mapped = rules.get(name)
+        if mapped is None:
+            parts.append(None)
+            continue
+        axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            parts.append(None)
+            continue
+        if mesh is not None:
+            # drop the whole mapping if it doesn't divide evenly
+            size = _mesh_axis_size(mesh, axes)
+            if size == 0 or dim % max(size, 1) != 0:
+                # try progressively shorter prefixes
+                while axes and dim % _mesh_axis_size(mesh, axes) != 0:
+                    axes = axes[:-1]
+                if not axes:
+                    parts.append(None)
+                    continue
+        used.update(axes)
+        parts.append(axes if len(axes) > 1 else axes[0])
+    return P(*parts)
+
+
+def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a logical sharding constraint if a rule-set is active.
+
+    Outside any ``axis_rules`` context (unit tests, single-device runs) this
+    is the identity, so model code is unconditionally annotated.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    mesh = current_mesh()
+    spec = logical_spec(x.shape, names, rules, mesh)
+    if all(p is None for p in spec):
+        return x
+    if mesh is not None:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def named_sharding(mesh: Mesh, dims: Sequence[int], names: Sequence[Optional[str]],
+                   rules: Optional[AxisRules] = None) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(dims, names, rules, mesh))

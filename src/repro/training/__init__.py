@@ -1,0 +1,3 @@
+from repro.training.step import TrainStepConfig, make_train_step
+
+__all__ = ["TrainStepConfig", "make_train_step"]

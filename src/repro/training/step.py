@@ -1,0 +1,137 @@
+"""Train-step builder: loss → grads → AdamW, with selectable memory policy.
+
+Memory policies map to the paper's training case study (§5.1):
+
+- ``remat="none"``      — keep all activations (memory-hungry baseline)
+- ``remat="full"``      — recompute everything (the paper's baseline
+                          memory-saving technique; ~+1 forward of FLOPs)
+- ``remat="offload"``   — HyperOffload: park tagged activations
+                          ("resid"/"attn_out"/"mlp_out") in pinned_host
+                          instead of recomputing or keeping them in HBM
+- ``offload_opt_state`` — park AdamW moments in host memory between steps
+                          (§5.1 case 2); the step fetches them on entry
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.offload.policies import OFFLOADABLE_NAMES, offload_remat_policy, remat_policy
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    remat: str = "none"              # none | full | offload
+    offload_opt_state: bool = False
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # gradient accumulation: split the global batch into N microbatches
+    # scanned sequentially — activation memory scales with batch/N while the
+    # optimizer sees the full-batch gradient (composes with offload remat)
+    grad_accum: int = 1
+
+
+def _policy(ts: TrainStepConfig):
+    if ts.remat == "none":
+        return None
+    if ts.remat == "full":
+        return remat_policy("nothing")
+    if ts.remat == "offload":
+        return offload_remat_policy(OFFLOADABLE_NAMES)
+    raise ValueError(ts.remat)
+
+
+def make_train_step(model: Model, ts: TrainStepConfig = TrainStepConfig(),
+                    jit: bool = True) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    policy = _policy(ts)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat_policy=policy)
+
+    def grad_accum_fn(params, batch):
+        """Mean loss/grads over ts.grad_accum sequential microbatches."""
+        n = ts.grad_accum
+        micro = jax.tree.map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+        def body(carry, mb):
+            loss_acc, grad_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            return (loss_acc + loss,
+                    jax.tree.map(jnp.add, grad_acc, grads)), None
+
+        zero = (jnp.zeros((), jnp.float32),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (loss_sum, grad_sum), _ = jax.lax.scan(body, zero, micro)
+        inv = 1.0 / n
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grad_sum)
+
+    def step(params, opt_state: AdamWState, batch: Dict[str, jax.Array]):
+        if ts.grad_accum > 1:
+            loss, grads = grad_accum_fn(params, batch)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr = cosine_schedule(opt_state.step + 1, peak_lr=ts.peak_lr,
+                             warmup=ts.warmup, total=ts.total_steps)
+        if ts.offload_opt_state:
+            # Prefetch the moments from the pool for the update...
+            from repro.offload.optstate import fetch_in_jit
+            opt_state = AdamWState(step=opt_state.step,
+                                   mu=fetch_in_jit(opt_state.mu),
+                                   nu=fetch_in_jit(opt_state.nu))
+        new_params, new_state = adamw_update(
+            grads, opt_state, params, lr,
+            b1=ts.b1, b2=ts.b2, weight_decay=ts.weight_decay,
+            grad_clip=ts.grad_clip)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss, "grad_norm": gn, "lr": lr}
+        return new_params, new_state, metrics
+
+    if jit:
+        step = jax.jit(step, donate_argnums=(0, 1))
+
+    if not ts.offload_opt_state:
+        return step
+
+    # Store the updated moments back to the pool after each step. XLA:CPU
+    # cannot place jit *outputs* in host memory (annotate_device_placement is
+    # TPU/GPU-only), so the Store happens as an async device_put immediately
+    # after dispatch — on TPU this is the same DMA the in-jit path would
+    # emit, overlapped with the next step's forward.
+    from repro.offload.optstate import host_offload_state
+
+    def step_with_park(params, opt_state: AdamWState, batch):
+        new_params, new_state, metrics = step(params, opt_state, batch)
+        new_state = AdamWState(step=new_state.step,
+                               mu=host_offload_state(new_state.mu),
+                               nu=host_offload_state(new_state.nu))
+        return new_params, new_state, metrics
+
+    return step_with_park
+
+
+def init_train_state(model: Model, key, dtype=jnp.float32,
+                     ts: TrainStepConfig = TrainStepConfig()) -> Tuple[Any, AdamWState]:
+    params = model.init(key, dtype)
+    opt_state = adamw_init(params)
+    if ts.offload_opt_state:
+        from repro.offload.optstate import host_offload_state
+        opt_state = AdamWState(step=opt_state.step,
+                               mu=host_offload_state(opt_state.mu),
+                               nu=host_offload_state(opt_state.nu))
+    return params, opt_state

@@ -1,0 +1,32 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the real (single) device; only launch/dryrun.py forces 512."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)
+
+
+def small_graph():
+    """A 4-layer chain with remote weights + an offloadable activation gap,
+    shared by core tests."""
+    from repro.core.ir import Graph
+    g = Graph()
+    g.add_tensor("x", 1 << 20)
+    prev = "x"
+    for i in range(4):
+        g.add_tensor(f"w{i}", 64 << 20, "weight", "remote")
+        g.add_tensor(f"h{i}", 1 << 20)
+        g.compute(f"f{i}", inputs=(prev, f"w{i}"), outputs=(f"h{i}",),
+                  flops=5e11, hbm_bytes=1e6)
+        prev = f"h{i}"
+    # an activation produced early and consumed late (offload candidate)
+    g.add_tensor("skip", 128 << 20)
+    g.nodes["f0"].outputs = ("h0", "skip")
+    g.add_tensor("y", 1 << 20)
+    g.compute("tail", inputs=("h3", "skip"), outputs=("y",),
+              flops=5e11, hbm_bytes=1e6)
+    return g

@@ -1,0 +1,115 @@
+"""Hypothesis property tests on HyperOffload's core invariants."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import insertion, lifetime, memsim, schedule, timeline
+from repro.core.allocator import FirstFitAllocator
+from repro.core.costmodel import TPU_V5E
+from repro.core.ir import Graph
+
+
+@st.composite
+def chain_graphs(draw):
+    """Random layer chains with mixed tensor classes and sizes."""
+    n = draw(st.integers(2, 8))
+    g = Graph()
+    g.add_tensor("x", draw(st.integers(1, 1 << 22)))
+    prev = "x"
+    skips = []
+    for i in range(n):
+        loc = draw(st.sampled_from(["device", "remote"]))
+        g.add_tensor(f"w{i}", draw(st.integers(1, 1 << 28)), "weight", loc)
+        g.add_tensor(f"h{i}", draw(st.integers(1, 1 << 24)))
+        outs = [f"h{i}"]
+        if draw(st.booleans()):
+            g.add_tensor(f"s{i}", draw(st.integers(1 << 20, 1 << 28)))
+            outs.append(f"s{i}")
+            skips.append(f"s{i}")
+        g.compute(f"f{i}", inputs=(prev, f"w{i}"), outputs=tuple(outs),
+                  flops=draw(st.floats(1e9, 1e13)), hbm_bytes=1e6)
+        prev = f"h{i}"
+    if skips:
+        g.add_tensor("y", 8)
+        g.compute("tail", inputs=(prev, *skips), outputs=("y",), flops=1e10)
+    return g
+
+
+@given(chain_graphs())
+@settings(max_examples=40, deadline=None)
+def test_insertion_produces_valid_graph(g):
+    g2 = insertion.insert_cache_ops(g, TPU_V5E)
+    g2.validate_order(g2.order())
+    # every compute node survives, exactly once
+    comp0 = [n for n, v in g.nodes.items() if v.kind == "compute"]
+    comp1 = [n for n, v in g2.nodes.items() if v.kind == "compute"]
+    assert comp0 == comp1
+
+
+@given(chain_graphs())
+@settings(max_examples=25, deadline=None)
+def test_refined_order_invariants(g):
+    g2 = insertion.insert_cache_ops(g, TPU_V5E)
+    order = schedule.refine_order(g2, TPU_V5E)
+    # permutation + validity
+    assert sorted(order) == sorted(g2.order())
+    g2.validate_order(order)
+    # every prefetch precedes its tensor's next compute consumer
+    pos = {n: i for i, n in enumerate(order)}
+    for n, node in g2.nodes.items():
+        if node.kind != "prefetch":
+            continue
+        consumers = [pos[c] for c, cn in g2.nodes.items()
+                     if cn.kind == "compute" and node.tensor in cn.inputs
+                     and pos[c] > pos[n]]
+        # at least the consumer it was inserted for is still after it,
+        # unless the tensor has no consumer after the offload gap
+        reads_after_any = [pos[c] for c, cn in g2.nodes.items()
+                           if cn.kind == "compute" and node.tensor in cn.inputs]
+        if reads_after_any and max(reads_after_any) > pos[n]:
+            assert consumers, f"prefetch {n} scheduled after all consumers"
+
+
+@given(chain_graphs())
+@settings(max_examples=25, deadline=None)
+def test_offload_never_increases_peak(g):
+    base_peak = memsim.simulate(g.residentize()).peak_bytes
+    g2 = insertion.insert_cache_ops(g, TPU_V5E)
+    order = schedule.refine_order(g2, TPU_V5E)
+    opt_peak = memsim.simulate(g2, order).peak_bytes
+    assert opt_peak <= base_peak
+
+
+@given(st.lists(st.tuples(st.sampled_from(["a", "f"]),
+                          st.integers(0, 9),
+                          st.integers(1, 1 << 16)),
+                min_size=1, max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_allocator_invariants(ops):
+    a = FirstFitAllocator(1 << 20, alignment=64)
+    live = {}
+    for kind, tid, size in ops:
+        name = f"t{tid}"
+        if kind == "a" and name not in live:
+            if a.alloc(name, size):
+                live[name] = size
+        elif kind == "f" and name in live:
+            a.free(name)
+            live.pop(name)
+        # no overlap between blocks
+        blocks = sorted(a.blocks.values())
+        for (o1, s1), (o2, s2) in zip(blocks, blocks[1:]):
+            assert o1 + s1 <= o2
+        # all blocks within capacity
+        assert all(o + s <= a.capacity for o, s in a.blocks.values())
+
+
+@given(chain_graphs(), st.floats(10e9, 200e9))
+@settings(max_examples=20, deadline=None)
+def test_timeline_total_bounds(g, bw):
+    hw = TPU_V5E.with_pool_bw(bw)
+    g2 = insertion.insert_cache_ops(g, hw)
+    tl = timeline.simulate(g2, hw)
+    # total ≥ compute-only lower bound; exposed = total - busy
+    assert tl.total >= tl.compute_busy - 1e-12
+    assert abs(tl.exposed_comm - (tl.total - tl.compute_busy)) < 1e-9

@@ -1,0 +1,130 @@
+"""Algorithm 1 (execution-order refinement), insertion, timeline, planner."""
+
+import pytest
+
+from repro.core import insertion, memsim, schedule, timeline
+from repro.core.costmodel import TPU_V5E, ASCEND_LIKE
+from repro.core.ir import Graph
+from repro.core.planner import HyperOffloadPlanner
+
+from conftest import small_graph
+
+
+def chain_with_remote_weights(n=6, wbytes=256 << 20, flops=2e12):
+    g = Graph()
+    g.add_tensor("x", 1 << 20)
+    prev = "x"
+    for i in range(n):
+        g.add_tensor(f"w{i}", wbytes, "weight", "remote")
+        g.add_tensor(f"h{i}", 1 << 20)
+        g.compute(f"f{i}", inputs=(prev, f"w{i}"), outputs=(f"h{i}",),
+                  flops=flops, hbm_bytes=1e6)
+        prev = f"h{i}"
+    return g
+
+
+def test_insertion_adds_mandatory_prefetches():
+    g = chain_with_remote_weights()
+    g2 = insertion.insert_cache_ops(g, TPU_V5E)
+    prefetches = [n for n in g2.order() if g2.nodes[n].kind == "prefetch"]
+    assert len(prefetches) == 6
+    g2.validate_order(g2.order())
+
+
+def test_insertion_respects_min_bytes():
+    g = chain_with_remote_weights(wbytes=1024)  # below min_bytes
+    g2 = insertion.insert_cache_ops(g, TPU_V5E)
+    # tiny tensors are not offloaded; remote-initial flag flipped to device
+    assert all(not n.is_cache_op for n in g2.nodes.values())
+    assert g2.tensors["w0"].initial_location == "device"
+
+
+def test_insertion_rejects_unamortizable_activation():
+    g = small_graph()
+    # make compute so fast nothing amortizes
+    for node in g.nodes.values():
+        node.flops = 1.0
+    g2 = insertion.insert_cache_ops(
+        g, TPU_V5E, insertion.InsertionOptions(offload_states=False))
+    stores = [n for n in g2.nodes.values() if n.kind == "store"]
+    assert not stores
+
+
+def test_refined_order_is_valid_and_not_worse():
+    g = chain_with_remote_weights()
+    g2 = insertion.insert_cache_ops(g, TPU_V5E)
+    naive = g2.order()
+    refined = schedule.refine_order(g2, TPU_V5E, naive)
+    g2.validate_order(refined)
+    assert sorted(refined) == sorted(naive)
+    tl_n = timeline.simulate(g2, TPU_V5E, naive)
+    tl_r = timeline.simulate(g2, TPU_V5E, refined)
+    mem_n = memsim.simulate(g2, naive).peak_bytes
+    mem_r = memsim.simulate(g2, refined).peak_bytes
+    # Algorithm 1's combined objective must not get worse
+    lam = schedule.ScheduleOptions().mem_weight
+    cost_n = tl_n.exposed_comm + lam * (mem_n / TPU_V5E.hbm_bytes) * tl_n.total
+    cost_r = tl_r.exposed_comm + lam * (mem_r / TPU_V5E.hbm_bytes) * tl_r.total
+    assert cost_r <= cost_n + 1e-9
+
+
+def test_refinement_fixes_adversarial_early_prefetch():
+    """All prefetches hoisted to the front (Fig. 4b: maximal residency) —
+    Algorithm 1 must push them toward just-in-time positions."""
+    g = chain_with_remote_weights()
+    g2 = insertion.insert_cache_ops(g, TPU_V5E)
+    # adversarial order: all prefetches first
+    pre = [n for n in g2.order() if g2.nodes[n].kind == "prefetch"]
+    rest = [n for n in g2.order() if g2.nodes[n].kind != "prefetch"]
+    adversarial = pre + rest
+    g2.validate_order(adversarial)
+    peak_adv = memsim.simulate(g2, adversarial).peak_bytes
+    refined = schedule.refine_order(g2, TPU_V5E, adversarial)
+    peak_ref = memsim.simulate(g2, refined).peak_bytes
+    assert peak_ref < peak_adv  # residency waste removed
+    # overlap preserved: exposed only the first transfer
+    tl = timeline.simulate(g2, TPU_V5E, refined)
+    first = TPU_V5E.transfer_time(g2.tensors["w0"].nbytes, "r2d")
+    assert tl.exposed_comm == pytest.approx(first, rel=0.2)
+
+
+def test_timeline_overlap_vs_serial():
+    g = chain_with_remote_weights()
+    g2 = insertion.insert_cache_ops(g, TPU_V5E)
+    tl = timeline.simulate(g2, TPU_V5E)
+    compute_total = tl.compute_busy
+    # transfers (beyond the first) hide behind compute
+    assert tl.total < compute_total + 6 * TPU_V5E.transfer_time(256 << 20, "r2d")
+
+
+def test_reactive_baseline_slower_than_planned():
+    g = chain_with_remote_weights()
+    base = g.residentize()
+    cap = 3 * (256 << 20)  # fits 3 weights
+    tl_reactive = timeline.simulate_reactive(base, TPU_V5E, cap)
+    g2 = insertion.insert_cache_ops(g, TPU_V5E)
+    tl_plan = timeline.simulate(g2, TPU_V5E,
+                                schedule.refine_order(g2, TPU_V5E))
+    assert tl_reactive.stalls > 0
+    assert tl_plan.total < tl_reactive.total
+
+
+def test_planner_end_to_end_summary():
+    g = chain_with_remote_weights()
+    plan = HyperOffloadPlanner(TPU_V5E, reactive_capacity=3 * (256 << 20)).plan(g)
+    s = plan.summary()
+    assert s["opt_peak_gb"] < s["base_peak_gb"]
+    assert plan.reactive_timeline.total > plan.timeline.total
+    assert plan.peak_reduction > 0.5
+
+
+def test_bandwidth_sweep_monotonic():
+    """More pool bandwidth ⇒ never slower (Fig. 6 trend)."""
+    g = chain_with_remote_weights()
+    totals = []
+    for bw in (20e9, 40e9, 80e9, 160e9):
+        hw = TPU_V5E.with_pool_bw(bw)
+        g2 = insertion.insert_cache_ops(g, hw)
+        tl = timeline.simulate(g2, hw)
+        totals.append(tl.total)
+    assert totals == sorted(totals, reverse=True)

@@ -1,0 +1,210 @@
+"""Optimizer, data pipeline, checkpointing, sharding rules, jax_exec."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.core.ir import Graph
+from repro.core.jax_exec import PlanExecutor, run_baseline
+from repro.core.planner import HyperOffloadPlanner
+from repro.core.costmodel import TPU_V5E
+from repro.data.pipeline import SyntheticTokens
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.sharding.rules import DEFAULT_RULES, logical_spec
+from repro.launch.mesh import make_debug_mesh
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_decreases_quadratic():
+    w = {"w": jnp.array([5.0, -3.0, 2.0])}
+    st_ = adamw_init(w)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(w)
+        w, st_ = adamw_update(g, st_, w, 0.05, weight_decay=0.0)
+    assert float(jnp.max(jnp.abs(w["w"]))) < 0.1
+
+
+def test_adamw_grad_clip():
+    w = {"w": jnp.ones((4,))}
+    st_ = adamw_init(w)
+    g = {"w": jnp.full((4,), 1e6)}
+    w2, st2 = adamw_update(g, st_, w, 0.1, grad_clip=1.0, weight_decay=0.0)
+    # clipped: update magnitude bounded by lr * O(1)
+    assert float(jnp.max(jnp.abs(w2["w"] - w["w"]))) < 0.2
+
+
+def test_cosine_schedule_shape():
+    assert float(cosine_schedule(0, peak_lr=1.0, warmup=10, total=100)) == 0.0
+    assert float(cosine_schedule(10, peak_lr=1.0, warmup=10, total=100)) == pytest.approx(1.0)
+    end = float(cosine_schedule(100, peak_lr=1.0, warmup=10, total=100, floor=0.1))
+    assert end == pytest.approx(0.1, abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_tokens_deterministic_and_shifted():
+    d = SyntheticTokens(vocab_size=97, seq_len=16, global_batch=4, seed=3)
+    b1, b2 = d.batch(5), d.batch(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(d.batch(6)["tokens"]),
+                              np.asarray(b1["tokens"]))
+    # targets are next-token shifted
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["targets"][:, :-1]))
+    assert int(b1["tokens"].max()) < 97
+
+
+def test_synthetic_learnable_structure():
+    """Most transitions follow the fixed permutation."""
+    d = SyntheticTokens(vocab_size=50, seq_len=64, global_batch=8, noise=0.1)
+    b = d.batch(0)
+    toks, tgts = np.asarray(b["tokens"]), np.asarray(b["targets"])
+    # the same current token maps to the same next token (mod noise)
+    from collections import Counter, defaultdict
+    votes = defaultdict(Counter)
+    for row_t, row_y in zip(toks, tgts):
+        for t, y in zip(row_t, row_y):
+            votes[t][y] += 1
+    agree = sum(c.most_common(1)[0][1] for c in votes.values())
+    total = sum(sum(c.values()) for c in votes.values())
+    assert agree / total > 0.8
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "list": [jnp.zeros((2,)), jnp.full((3,), 7.0)]}
+    path = os.path.join(tmp_path, "ck.npz")
+    save_checkpoint(path, tree, step=42)
+    restored, step = load_checkpoint(path, tree)
+    assert step == 42
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = os.path.join(tmp_path, "ck.npz")
+    save_checkpoint(path, {"a": jnp.ones((2, 2))})
+    with pytest.raises(ValueError, match="shape"):
+        load_checkpoint(path, {"a": jnp.ones((3, 3))})
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+
+def test_logical_spec_divisibility_drop():
+    mesh = make_debug_mesh((1, 1))
+    # kv=8 over a 16-wide model axis must drop (simulated by size-1 mesh —
+    # use the pure arithmetic path with explicit mesh shape instead)
+    from jax.sharding import PartitionSpec as P
+    spec = logical_spec((8, 64), ("kv_heads", None), DEFAULT_RULES, mesh)
+    assert spec == P("model", None) or spec == P(None, None)
+
+
+def test_logical_spec_no_repeated_axes():
+    mesh = make_debug_mesh((1, 1))
+    spec = logical_spec((16, 16, 16), ("embed", "embed", "embed"),
+                        DEFAULT_RULES, mesh)
+    used = [s for s in spec if s is not None]
+    flat = []
+    for s in used:
+        flat.extend(s if isinstance(s, tuple) else (s,))
+    assert len(flat) == len(set(flat))
+
+
+@given(st.lists(st.integers(1, 512), min_size=1, max_size=4))
+@settings(max_examples=30, deadline=None)
+def test_logical_spec_always_valid_partitionspec(dims):
+    names = ["batch", "embed", "mlp", "heads"][: len(dims)]
+    spec = logical_spec(dims, names, DEFAULT_RULES, make_debug_mesh((1, 1)))
+    assert len(spec) <= len(dims)
+
+
+# ---------------------------------------------------------------------------
+# Plan executor on real arrays
+# ---------------------------------------------------------------------------
+
+
+def test_plan_executor_equivalence_with_offload():
+    D = 64
+    g = Graph()
+    g.add_tensor("x", D * D * 4)
+    fns, inputs = {}, {}
+    prev = "x"
+    for i in range(5):
+        g.add_tensor(f"w{i}", 64 << 20, "weight", "remote")
+        g.add_tensor(f"h{i}", D * D * 4)
+        g.compute(f"f{i}", inputs=(prev, f"w{i}"), outputs=(f"h{i}",),
+                  flops=1e12, hbm_bytes=1e6)
+        fns[f"f{i}"] = lambda x, w: (jnp.tanh(x @ w[:D, :D]),)
+        inputs[f"w{i}"] = 0.1 * jax.random.normal(jax.random.key(i), (D, D))
+        prev = f"h{i}"
+    inputs["x"] = jax.random.normal(jax.random.key(9), (D, D))
+
+    plan = HyperOffloadPlanner(TPU_V5E).plan(g)
+    assert any(n.kind == "prefetch" for n in plan.graph.nodes.values())
+    out = PlanExecutor(plan.graph, fns).run(inputs, plan.order)
+    ref = run_baseline(g, fns, inputs)
+    np.testing.assert_allclose(np.asarray(out["h4"]), np.asarray(ref["h4"]),
+                               atol=1e-6)
+
+
+def test_plan_executor_rejects_missing_fn():
+    g = Graph()
+    g.add_tensor("a", 8)
+    g.compute("f", outputs=("a",))
+    with pytest.raises(ValueError, match="no compute fn"):
+        PlanExecutor(g, {})
+
+
+# ---------------------------------------------------------------------------
+# Gradient accumulation
+# ---------------------------------------------------------------------------
+
+
+def test_grad_accum_matches_full_batch():
+    """grad_accum=4 must match the single-shot step to fp32 tolerance."""
+    import jax.numpy as jnp
+    from repro.configs import REGISTRY
+    from repro.models.model import build_model
+    from repro.training.step import (TrainStepConfig, init_train_state,
+                                     make_train_step)
+
+    cfg = REGISTRY["phi3-mini-3.8b"].reduced()
+    m = build_model(cfg)
+    data = SyntheticTokens(cfg.vocab_size, seq_len=24, global_batch=8, noise=0.05)
+    out = {}
+    for ga in (1, 4):
+        ts = TrainStepConfig(warmup=2, total_steps=4, peak_lr=1e-3, grad_accum=ga)
+        params, opt = init_train_state(m, jax.random.key(0), ts=ts)
+        step = make_train_step(m, ts)
+        for i in range(4):
+            params, opt, metrics = step(params, opt, data.batch(i))
+        out[ga] = (params, float(metrics["loss"]))
+    assert out[1][1] == pytest.approx(out[4][1], abs=1e-4)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(out[1][0]),
+                              jax.tree.leaves(out[4][0])))
+    assert err < 1e-4
