@@ -56,14 +56,30 @@ def main():
               f"pages, err vs dense {err:.3e}, {dt * 1e3:.1f} ms")
     print(f"all pages: err {err_all:.3e} (exact), {t_all * 1e3:.1f} ms")
 
-    # decode loop: append new tokens, pages flush to the pool automatically
+    # decode loop with async prefetch: select on the post-append state (so a
+    # page flushed this step is a candidate), issue all page fetches at once
+    # through the transfer engine, and wait only inside attend — the fetches
+    # overlap each other and the selection/summary work
     flushes0 = cache.flushes
     for t in range(64):
         cache.append(jax.random.normal(jax.random.fold_in(ks[3], t), (b, hkv, d)),
                      jax.random.normal(jax.random.fold_in(ks[3], 1000 + t), (b, hkv, d)))
-        _ = cache.attend(q, scale=scale, top_k_pages=4)
+        inflight = cache.prefetch_pages(cache.select_pages(q, top_k=4))
+        _ = cache.attend(q, scale=scale, prefetched=inflight)
     print(f"decoded 64 tokens; {cache.flushes - flushes0} pages flushed to "
           f"the pool during decode; cache length {cache.length}")
+
+    # pool-manager traffic/occupancy: what the runtime actually moved
+    s = cache.pool_stats()
+    host, xfer = s["tier/host"], s["transfer"]
+    print(f"pool stats: {s['puts']} puts / {s['gets']} gets, "
+          f"{s['bytes_stored'] / 1e6:.2f} MB stored, "
+          f"{s['bytes_fetched'] / 1e6:.2f} MB fetched, "
+          f"host tier {host['used'] / 1e6:.2f}/{(host['capacity'] or 0) / 1e6:.2f} MB "
+          f"({host['entries']} pages, backend {host['backend']})")
+    print(f"transfer engine: {xfer['issued']} async fetches issued, "
+          f"{xfer['waits_overlapped']} fully overlapped, "
+          f"{xfer['waits_blocked']} blocked ({xfer['blocked_s'] * 1e3:.1f} ms exposed)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: install requirements (if anything is missing) and run the
+# full test suite. Usage: scripts/ci.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! python -c "import jax, numpy, pytest" 2>/dev/null; then
+    python -m pip install --quiet -r requirements.txt
+fi
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

@@ -22,6 +22,7 @@ from typing import Callable, Dict, Mapping, Optional, Sequence
 import jax
 
 from repro.core.ir import Graph
+from repro.pool import backend as pool_backend
 
 
 class PlanExecutor:
@@ -31,9 +32,9 @@ class PlanExecutor:
         self.graph = graph
         self.fns = dict(compute_fns)
         self.device = device or jax.devices()[0]
-        self.dev_sharding = jax.sharding.SingleDeviceSharding(self.device)
-        self.host_sharding = jax.sharding.SingleDeviceSharding(
-            self.device, memory_kind="pinned_host")
+        self.dev_sharding = pool_backend.device_sharding(self.device)
+        # probed host kind; None → NumPy host buffers (pool.backend fallback)
+        self.host_sharding = pool_backend.host_sharding(self.device)
         missing = [n for n, node in graph.nodes.items()
                    if node.kind == "compute" and n not in self.fns]
         if missing:
@@ -48,12 +49,17 @@ class PlanExecutor:
         order = list(order) if order is not None else graph.order()
         graph.validate_order(order)
 
+        def to_host(x):
+            if self.host_sharding is None:
+                return pool_backend.to_host(x, self.device)
+            return jax.device_put(x, self.host_sharding)
+
         env: Dict[str, jax.Array] = {}
         host: Dict[str, jax.Array] = {}
         for t, info in graph.tensors.items():
             if t in inputs:
                 if info.initial_location == "remote":
-                    host[t] = jax.device_put(inputs[t], self.host_sharding)
+                    host[t] = to_host(inputs[t])
                 else:
                     env[t] = jax.device_put(inputs[t], self.dev_sharding)
 
@@ -75,7 +81,7 @@ class PlanExecutor:
             elif node.kind == "prefetch":
                 env[node.tensor] = jax.device_put(host[node.tensor], self.dev_sharding)
             elif node.kind == "store":
-                host[node.tensor] = jax.device_put(env[node.tensor], self.host_sharding)
+                host[node.tensor] = to_host(env[node.tensor])
             elif node.kind == "detach":
                 env.pop(node.tensor, None)
 

@@ -1,48 +1,71 @@
-"""Paged KV cache with a host-side (remote-pool) page store (§5.2).
+"""Paged KV cache backed by the runtime memory pool (§5.2).
 
-Layout per layer: each full page is its own buffer in the pool
-(``pinned_host`` memory — pages are non-contiguous by construction, exactly
-like a paged allocator); the device keeps (a) a small *tail* buffer
-accumulating the current partial page and (b) per-page key *summaries*
-(mean key per page) used for sparse block selection — the paper's
-DeepSeek+NSA inference setting, where only the top-k relevant KV blocks are
-reloaded per decode step instead of the whole cache.
+Layout per layer: each full page is its own entry in the
+``MemoryPoolManager`` (host tier — pages are non-contiguous by
+construction, exactly like a paged allocator); the device keeps (a) a small
+*tail* buffer accumulating the current partial page and (b) per-page key
+*summaries* (mean key per page) used for sparse block selection — the
+paper's DeepSeek+NSA inference setting, where only the top-k relevant KV
+blocks are reloaded per decode step instead of the whole cache.
 
 Decode attention runs in two segments — selected pool pages + device tail —
 merged in a single softmax, so selecting *all* pages reproduces dense
 attention against the oracle (tests/test_offload_runtime.py).
 
-The page fetch (``jax.device_put`` of host pages) is the Prefetch cache
-operator; the page flush on tail overflow is the Store. The serving engine
-can issue next-layer fetches while the current layer computes, matching
-the graph-driven overlap the compiler plans.
+The page fetch is the Prefetch cache operator (sync via ``pool.get`` or
+async via ``prefetch_pages``/``TransferEngine``, which is how the serving
+engine overlaps next-layer fetches with the current layer's compute); the
+page flush on tail overflow is the Store. Capacity accounting and
+host-kind probing live in the pool — on platforms where ``pinned_host``
+shardings raise, pages degrade to ``unpinned_host`` or NumPy host buffers
+without the cache noticing.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+import itertools
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.pool import (
+    HOST_TIER, MemoryPoolManager, TransferEngine, TransferHandle, default_pool,
+)
+
 NEG_INF = -2.3819763e38
 
-
-def _host_sharding():
-    d = jax.devices()[0]
-    return jax.sharding.SingleDeviceSharding(d, memory_kind="pinned_host")
-
-
-def _dev_sharding():
-    return jax.sharding.SingleDeviceSharding(jax.devices()[0])
+# per-instance pool-key namespace, so caches sharing one pool (e.g. one pool
+# across a model's layers) never collide on page keys
+_CACHE_IDS = itertools.count()
 
 
 @jax.jit
 def _page_summary(k_page: jax.Array) -> jax.Array:
     """(B, page, Hkv, D) -> (B, Hkv, D) mean key."""
     return jnp.mean(k_page, axis=1)
+
+
+@dataclasses.dataclass
+class PrefetchedPages:
+    """In-flight page fetches; ``wait()`` yields what ``fetch_pages``
+    would have returned synchronously, plus the page indices."""
+
+    idx: np.ndarray
+    k_handles: List[TransferHandle]
+    v_handles: List[TransferHandle]
+    _shape: Tuple[int, ...]
+    _dtype: jnp.dtype
+
+    def wait(self) -> Tuple[jax.Array, jax.Array, np.ndarray]:
+        if not self.k_handles:
+            empty = jnp.zeros((0,) + self._shape, self._dtype)
+            return empty, empty, self.idx
+        ks = jnp.stack([h.wait() for h in self.k_handles])
+        vs = jnp.stack([h.wait() for h in self.v_handles])
+        return ks, vs, self.idx
 
 
 @dataclasses.dataclass
@@ -56,27 +79,41 @@ class PagedKVCache:
     head_dim: int
     dtype: jnp.dtype
 
-    k_pool: List[Optional[jax.Array]]   # per page: (B, page, Hkv, D) pinned_host
-    v_pool: List[Optional[jax.Array]]
+    pool: MemoryPoolManager    # tiered page store (host tier by default)
+    k_pool: List[Optional[str]]   # per page: pool key of the K page, or None
+    v_pool: List[Optional[str]]
     k_summary: jax.Array       # (n_pages, B, Hkv, D) — device
     k_tail: jax.Array          # (B, page, Hkv, D) — device (partial page)
     v_tail: jax.Array
     length: int = 0            # tokens appended so far
     fetches: int = 0           # pool→device page transfers (stats)
     flushes: int = 0           # device→pool page stores
+    key_ns: str = ""           # pool-key namespace (unique per instance)
 
     # ------------------------------------------------------------------
     @classmethod
     def create(cls, *, batch: int, max_seq: int, page_size: int,
-               n_kv_heads: int, head_dim: int, dtype=jnp.float32) -> "PagedKVCache":
+               n_kv_heads: int, head_dim: int, dtype=jnp.float32,
+               pool: Optional[MemoryPoolManager] = None) -> "PagedKVCache":
         n_pages = -(-max_seq // page_size)
+        if pool is None:
+            page_nbytes = (batch * page_size * n_kv_heads * head_dim
+                           * jnp.dtype(dtype).itemsize)
+            # host tier sized to exactly hold every K and V page; overflow
+            # (e.g. a shared pool across layers) spills to the remote tier.
+            # Transfer depth covers a full dense fetch (K+V of every page)
+            # so a prefetch batch issues completely before anything waits.
+            pool = default_pool(host_capacity=2 * n_pages * page_nbytes,
+                                transfer=TransferEngine(depth=2 * n_pages))
         return cls(
             page_size=page_size, n_pages=n_pages, batch=batch,
             n_kv_heads=n_kv_heads, head_dim=head_dim, dtype=dtype,
+            pool=pool,
             k_pool=[None] * n_pages, v_pool=[None] * n_pages,
             k_summary=jnp.zeros((n_pages, batch, n_kv_heads, head_dim), dtype),
             k_tail=jnp.zeros((batch, page_size, n_kv_heads, head_dim), dtype),
             v_tail=jnp.zeros((batch, page_size, n_kv_heads, head_dim), dtype),
+            key_ns=f"kvcache{next(_CACHE_IDS)}",
         )
 
     @property
@@ -87,16 +124,32 @@ class PagedKVCache:
     def tail_len(self) -> int:
         return self.length % self.page_size
 
+    def pool_stats(self) -> dict:
+        return self.pool.snapshot()
+
+    def close(self) -> None:
+        """Shut down the pool's transfer workers (call when the cache owns
+        its pool, e.g. per-layer caches in a long-lived serving process)."""
+        self.pool.close()
+
     # ------------------------------------------------------------------
+    def _store_page(self, page_idx: int, k_page: jax.Array,
+                    v_page: jax.Array) -> None:
+        # recent pages rank higher for sparse selection → keep them closest
+        kk = f"{self.key_ns}/k{page_idx}"
+        vk = f"{self.key_ns}/v{page_idx}"
+        self.pool.put(kk, k_page, HOST_TIER, priority=float(page_idx))
+        self.pool.put(vk, v_page, HOST_TIER, priority=float(page_idx))
+        self.k_pool[page_idx] = kk
+        self.v_pool[page_idx] = vk
+        self.flushes += 1
+
     def _flush_tail(self) -> None:
         """Store: commit the full tail page to the pool + update summary."""
         page_idx = self.length // self.page_size - 1
-        host = _host_sharding()
-        self.k_pool[page_idx] = jax.device_put(self.k_tail, host)
-        self.v_pool[page_idx] = jax.device_put(self.v_tail, host)
+        self._store_page(page_idx, self.k_tail, self.v_tail)
         self.k_summary = self.k_summary.at[page_idx].set(
             _page_summary(self.k_tail))
-        self.flushes += 1
 
     def append(self, k_t: jax.Array, v_t: jax.Array) -> None:
         """Append one token's K/V: (B, Hkv, D)."""
@@ -110,16 +163,13 @@ class PagedKVCache:
     def prefill(self, k_seq: jax.Array, v_seq: jax.Array) -> None:
         """Bulk-append a prompt: (B, S, Hkv, D)."""
         s = k_seq.shape[1]
-        host = _host_sharding()
         n_full = s // self.page_size
         for pi in range(n_full):
             sl = slice(pi * self.page_size, (pi + 1) * self.page_size)
             kp = k_seq[:, sl].astype(self.dtype)
             vp = v_seq[:, sl].astype(self.dtype)
-            self.k_pool[pi] = jax.device_put(kp, host)
-            self.v_pool[pi] = jax.device_put(vp, host)
+            self._store_page(pi, kp, vp)
             self.k_summary = self.k_summary.at[pi].set(_page_summary(kp))
-            self.flushes += 1
         rem = s - n_full * self.page_size
         if rem:
             self.k_tail = self.k_tail.at[:, :rem].set(
@@ -143,27 +193,42 @@ class PagedKVCache:
         idx = np.asarray(jax.lax.top_k(scores, top_k)[1])
         return np.sort(idx)
 
-    def fetch_pages(self, idx: np.ndarray) -> Tuple[jax.Array, jax.Array]:
-        """Prefetch: copy the selected pool pages to device memory. Returns
-        (n_sel, B, page, Hkv, D) device arrays."""
-        dev = _dev_sharding()
+    def _page_shape(self) -> Tuple[int, ...]:
+        return (self.batch, self.page_size, self.n_kv_heads, self.head_dim)
+
+    def fetch_pages(self, idx: Sequence[int]) -> Tuple[jax.Array, jax.Array]:
+        """Prefetch (sync): copy the selected pool pages to device memory.
+        Returns (n_sel, B, page, Hkv, D) device arrays."""
         if len(idx) == 0:
-            shape = (0, self.batch, self.page_size, self.n_kv_heads, self.head_dim)
+            shape = (0,) + self._page_shape()
             return jnp.zeros(shape, self.dtype), jnp.zeros(shape, self.dtype)
-        ks = [jax.device_put(self.k_pool[int(i)], dev) for i in idx]
-        vs = [jax.device_put(self.v_pool[int(i)], dev) for i in idx]
+        ks = [self.pool.get(self.k_pool[int(i)]) for i in idx]
+        vs = [self.pool.get(self.v_pool[int(i)]) for i in idx]
         self.fetches += len(idx)
         return jnp.stack(ks), jnp.stack(vs)
+
+    def prefetch_pages(self, idx: Sequence[int]) -> PrefetchedPages:
+        """Prefetch (async): issue page fetches through the pool's transfer
+        engine; the caller overlaps compute and calls ``.wait()`` at use."""
+        idx = np.asarray(idx, np.int64)
+        kh = [self.pool.prefetch(self.k_pool[int(i)]) for i in idx]
+        vh = [self.pool.prefetch(self.v_pool[int(i)]) for i in idx]
+        self.fetches += len(idx)
+        return PrefetchedPages(idx=idx, k_handles=kh, v_handles=vh,
+                               _shape=self._page_shape(), _dtype=self.dtype)
 
     # ------------------------------------------------------------------
     def attend(self, q: jax.Array, *, scale: float,
                top_k_pages: Optional[int] = None,
-               prefetched: Optional[Tuple[jax.Array, jax.Array, np.ndarray]] = None,
-               ) -> jax.Array:
+               prefetched=None) -> jax.Array:
         """Decode attention of q (B, Hq, D) over selected pages + tail.
-        ``prefetched`` lets the engine overlap next-layer fetches."""
+        ``prefetched`` — a ``PrefetchedPages`` or an already-waited
+        (k, v, idx) tuple — lets the engine overlap next-step fetches."""
         if prefetched is not None:
-            kp, vp, idx = prefetched
+            if isinstance(prefetched, PrefetchedPages):
+                kp, vp, idx = prefetched.wait()
+            else:
+                kp, vp, idx = prefetched
         else:
             idx = self.select_pages(q, top_k_pages)
             kp, vp = self.fetch_pages(idx)

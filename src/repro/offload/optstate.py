@@ -2,10 +2,16 @@
 
 Optimizer moments are touched once per step; HyperOffload parks them in the
 remote pool between updates. In JAX this is a sharding whose
-``memory_kind`` is ``pinned_host``: the train step receives host-resident
-moments, XLA copies them in before the update and the new moments are
-committed back to host by the output sharding — the Prefetch/Store pair at
-the optimizer-update node of the IR trace.
+``memory_kind`` is the platform's host kind: the train step receives
+host-resident moments, XLA copies them in before the update and the new
+moments are committed back to host by the output sharding — the
+Prefetch/Store pair at the optimizer-update node of the IR trace.
+
+The host kind is probed through ``repro.pool.backend`` rather than
+hard-coded: ``pinned_host`` where addressable (TPU/GPU), ``unpinned_host``
+on XLA:CPU, and a NumPy host buffer as the last-resort fallback on
+platforms with no memory-kind support at all — offload never raises, it
+degrades.
 """
 
 from __future__ import annotations
@@ -13,7 +19,18 @@ from __future__ import annotations
 from typing import Any, Optional
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec, SingleDeviceSharding
+import numpy as np
+from jax.sharding import SingleDeviceSharding
+
+from repro.pool import backend as pool_backend
+
+
+def _resolve_host_kind(kind: Optional[str]) -> Optional[str]:
+    """Map a requested kind onto what this platform addresses."""
+    caps = pool_backend.capabilities()
+    if kind is not None and kind in caps.memory_kinds:
+        return kind
+    return caps.host_kind
 
 
 def _with_memory_kind(sharding, kind: str):
@@ -22,24 +39,45 @@ def _with_memory_kind(sharding, kind: str):
     raise TypeError(f"sharding {sharding} has no memory kinds")
 
 
-def host_shardings(tree: Any, kind: str = "pinned_host") -> Any:
+def host_shardings(tree: Any, kind: Optional[str] = None) -> Any:
     """Map each array's current sharding to the host memory kind."""
-    return jax.tree.map(
-        lambda x: _with_memory_kind(x.sharding, kind), tree)
+    k = _resolve_host_kind(kind)
+    if k is None:
+        raise ValueError("platform addresses no host memory kind; "
+                         "use host_offload_state (NumPy fallback)")
+    return jax.tree.map(lambda x: _with_memory_kind(x.sharding, k), tree)
 
 
-def host_offload_state(state: Any, kind: str = "pinned_host") -> Any:
-    """Move a pytree of arrays to host memory (Store + Detach)."""
+def host_offload_state(state: Any, kind: Optional[str] = None) -> Any:
+    """Move a pytree of arrays to host memory (Store + Detach). Falls back
+    to NumPy host buffers where memory-kind shardings are unsupported."""
+    k = _resolve_host_kind(kind)
+    if k is None:
+        return jax.tree.map(pool_backend.to_host, state)
     return jax.tree.map(
-        lambda x: jax.device_put(x, _with_memory_kind(x.sharding, kind)),
+        lambda x: jax.device_put(x, _with_memory_kind(x.sharding, k))
+        if hasattr(x, "sharding") else pool_backend.to_host(x),
         state)
 
 
-def device_fetch_state(state: Any, kind: str = "device") -> Any:
-    """Bring a host-parked pytree back to device memory (Prefetch)."""
-    return jax.tree.map(
-        lambda x: jax.device_put(x, _with_memory_kind(x.sharding, kind)),
-        state)
+def device_fetch_state(state: Any, kind: Optional[str] = None) -> Any:
+    """Bring a host-parked pytree back to device memory (Prefetch). Each
+    leaf keeps its own sharding (only the memory kind changes), so
+    multi-device trees come back with their original distribution."""
+    caps = pool_backend.capabilities()
+    if kind is not None and kind in caps.memory_kinds:
+        k = kind
+    else:
+        k = caps.default_kind   # the device memory, however it's spelled
+
+    def fetch(x):
+        if isinstance(x, np.ndarray) or not hasattr(x, "sharding"):
+            return pool_backend.to_device(x)
+        if k is not None and hasattr(x.sharding, "with_memory_kind"):
+            return jax.device_put(x, _with_memory_kind(x.sharding, k))
+        return jax.device_put(x, pool_backend.device_sharding())
+
+    return jax.tree.map(fetch, state)
 
 
 # -- in-jit variants ---------------------------------------------------------
@@ -47,18 +85,21 @@ def device_fetch_state(state: Any, kind: str = "device") -> Any:
 # sharding to mutate; transfers use explicit target shardings instead.
 
 
-def _default_shardings(kind: str):
+def _default_shardings(kind: Optional[str]):
     dev = jax.devices()[0]
+    if kind is None:
+        return SingleDeviceSharding(dev)
     return SingleDeviceSharding(dev, memory_kind=kind)
 
 
 def fetch_in_jit(state: Any, sharding=None) -> Any:
     """Prefetch a host-parked pytree inside a jitted computation."""
-    s = sharding if sharding is not None else _default_shardings("device")
+    s = sharding if sharding is not None else _default_shardings(None)
     return jax.tree.map(lambda x: jax.device_put(x, s), state)
 
 
 def park_in_jit(state: Any, sharding=None) -> Any:
     """Store a pytree to host memory inside a jitted computation."""
-    s = sharding if sharding is not None else _default_shardings("pinned_host")
+    s = (sharding if sharding is not None
+         else _default_shardings(pool_backend.host_memory_kind()))
     return jax.tree.map(lambda x: jax.device_put(x, s), state)

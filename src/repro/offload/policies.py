@@ -11,9 +11,11 @@ latency-hiding scheduler on real hardware.
 
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
+
+from repro.pool import backend as pool_backend
 
 OFFLOADABLE_NAMES = ("resid", "attn_out", "mlp_out")
 
@@ -32,9 +34,16 @@ def remat_policy(name: str = "nothing"):
 
 
 def offload_remat_policy(names: Sequence[str] = ("resid",),
-                         offload_dst: str = "pinned_host"):
+                         offload_dst: Optional[str] = None):
     """Offload the named activations to host memory instead of keeping them
-    in HBM or recomputing them."""
+    in HBM or recomputing them. The destination defaults to the probed host
+    memory kind (pinned_host on TPU/GPU, unpinned_host on XLA:CPU); on
+    platforms with no host memory kind at all, degrade to saving the named
+    activations on device — never raise."""
+    if offload_dst is None:
+        offload_dst = pool_backend.host_memory_kind()
+        if offload_dst is None:
+            return jax.checkpoint_policies.save_only_these_names(*names)
     return jax.checkpoint_policies.save_and_offload_only_these_names(
         names_which_can_be_saved=[],
         names_which_can_be_offloaded=list(names),

@@ -1,0 +1,35 @@
+"""Runtime memory-pool subsystem (§5 remote memory backend).
+
+- ``backend``  — tiered memory backends (device HBM / host memory-kind
+  shardings / NumPy simulated remote pool) behind one interface, with
+  per-device capability probing and graceful fallback;
+- ``manager``  — capacity-tracked ``MemoryPoolManager`` with
+  priority+LRU eviction that spills down the tier hierarchy;
+- ``transfer`` — async double-buffered ``TransferEngine`` with explicit
+  wait handles (prefetches genuinely overlap compute);
+- ``executor`` — ``OffloadPlanExecutor`` runs a planned graph's refined
+  order against the real pool and proves the executed residency trace
+  matches ``core.memsim``'s prediction.
+"""
+
+from repro.pool.backend import (
+    DEVICE_TIER, HOST_TIER, REMOTE_TIER,
+    capabilities, device_sharding, host_memory_kind, host_sharding,
+    is_host_resident, make_backend, make_host_backend, to_device, to_host,
+)
+from repro.pool.manager import (
+    MemoryPoolManager, PoolCapacityError, PoolEntry, TierState, default_pool,
+)
+from repro.pool.transfer import TransferEngine, TransferHandle, TransferStats
+from repro.pool.executor import ExecutionTrace, OffloadPlanExecutor
+
+__all__ = [
+    "DEVICE_TIER", "HOST_TIER", "REMOTE_TIER",
+    "capabilities", "device_sharding", "host_memory_kind", "host_sharding",
+    "is_host_resident", "make_backend", "make_host_backend",
+    "to_device", "to_host",
+    "MemoryPoolManager", "PoolCapacityError", "PoolEntry", "TierState",
+    "default_pool",
+    "TransferEngine", "TransferHandle", "TransferStats",
+    "ExecutionTrace", "OffloadPlanExecutor",
+]

@@ -1,0 +1,234 @@
+"""Tiered memory backends behind one interface (§5 remote memory backend).
+
+Three tiers mirror the paper's hierarchy:
+
+- **device** — accelerator HBM (JAX default memory);
+- **host**   — ``pinned_host`` memory-kind shardings where the platform
+  supports them (TPU/GPU), degrading to ``unpinned_host`` and finally to
+  plain NumPy host buffers where memory-kind shardings raise (XLA:CPU only
+  addresses ``unpinned_host``; some builds address nothing but the default);
+- **remote** — the simulated remote pool: NumPy buffers standing in for the
+  CloudMatrix pooled-DRAM tier, always available.
+
+Capability probing happens once per device and is cached; every offload
+call site (kv pages, optimizer moments, plan execution) routes through the
+probe instead of hard-coding ``pinned_host`` — that hard-coding is exactly
+why the seed's offload runtime failed on CPU backends.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+DEVICE_TIER = "device"
+HOST_TIER = "host"
+REMOTE_TIER = "remote"
+
+# preference order for the host tier's memory kind
+_HOST_KIND_PREFERENCE = ("pinned_host", "unpinned_host")
+
+
+@dataclass(frozen=True)
+class Capabilities:
+    """What one device can address, probed once."""
+
+    platform: str
+    memory_kinds: Tuple[str, ...]      # addressable kinds ("" if unknown)
+    default_kind: Optional[str]        # the device's default memory kind
+    host_kind: Optional[str]           # best host kind, None → NumPy fallback
+
+    @property
+    def supports_host_sharding(self) -> bool:
+        return self.host_kind is not None
+
+
+def _probe(device) -> Capabilities:
+    kinds: Tuple[str, ...] = ()
+    default = None
+    try:
+        kinds = tuple(m.kind for m in device.addressable_memories())
+        default = device.default_memory().kind
+    except Exception:  # very old jaxlib: no memories API
+        pass
+    host = next((k for k in _HOST_KIND_PREFERENCE if k in kinds), None)
+    if host is not None:
+        # the kind being listed is not enough on every build — a put must work
+        try:
+            s = jax.sharding.SingleDeviceSharding(device, memory_kind=host)
+            jax.device_put(np.zeros(1, np.uint8), s)
+        except Exception:
+            host = None
+    return Capabilities(platform=device.platform, memory_kinds=kinds,
+                        default_kind=default, host_kind=host)
+
+
+@functools.lru_cache(maxsize=None)
+def _capabilities_cached(device) -> Capabilities:
+    return _probe(device)
+
+
+def capabilities(device=None) -> Capabilities:
+    return _capabilities_cached(device if device is not None else jax.devices()[0])
+
+
+def host_memory_kind(device=None) -> Optional[str]:
+    """Best host memory kind for this device, or None (→ NumPy fallback)."""
+    return capabilities(device).host_kind
+
+
+def device_sharding(device=None) -> jax.sharding.SingleDeviceSharding:
+    d = device if device is not None else jax.devices()[0]
+    return jax.sharding.SingleDeviceSharding(d)
+
+
+def host_sharding(device=None) -> Optional[jax.sharding.SingleDeviceSharding]:
+    d = device if device is not None else jax.devices()[0]
+    kind = host_memory_kind(d)
+    if kind is None:
+        return None
+    return jax.sharding.SingleDeviceSharding(d, memory_kind=kind)
+
+
+# ---------------------------------------------------------------------------
+# single-array transfer helpers (used by optstate / jax_exec)
+# ---------------------------------------------------------------------------
+
+
+def to_host(x, device=None):
+    """Store one array in host memory: memory-kind sharding if supported,
+    else a NumPy buffer (forces the device→host copy either way)."""
+    s = host_sharding(device)
+    if s is None:
+        return np.asarray(x)
+    return jax.device_put(x, s)
+
+
+def to_device(x, device=None) -> jax.Array:
+    """Prefetch one array (jax host-kind array or NumPy buffer) to device."""
+    return jax.device_put(x, device_sharding(device))
+
+
+def is_host_resident(x, device=None) -> bool:
+    """True if ``x`` lives in the host tier (however this platform spells
+    it). On probe-less builds only NumPy buffers count — a jax array's
+    memory kind can't be trusted to mean "host" there."""
+    if isinstance(x, np.ndarray):
+        return True
+    want = host_memory_kind(device)
+    if want is None:
+        return False
+    return getattr(getattr(x, "sharding", None), "memory_kind", None) == want
+
+
+# ---------------------------------------------------------------------------
+# backend objects (the pool manager's tier storage)
+# ---------------------------------------------------------------------------
+
+
+class MemoryBackend:
+    """One storage tier: ``put`` stores a device array into the tier and
+    returns an opaque handle; ``get`` materializes a handle on device."""
+
+    name: str = "abstract"
+
+    def put(self, value) -> Any:
+        raise NotImplementedError
+
+    def get(self, handle) -> jax.Array:
+        raise NotImplementedError
+
+    def nbytes(self, handle) -> int:
+        return int(handle.nbytes)
+
+    def holds(self, handle) -> bool:
+        """Residency check: does the handle live where this tier claims?"""
+        raise NotImplementedError
+
+
+class DeviceBackend(MemoryBackend):
+    """Accelerator HBM — JAX default memory."""
+
+    name = "device"
+
+    def __init__(self, device=None) -> None:
+        self.device = device if device is not None else jax.devices()[0]
+        self._sharding = device_sharding(self.device)
+
+    def put(self, value) -> jax.Array:
+        return jax.device_put(value, self._sharding)
+
+    def get(self, handle) -> jax.Array:
+        return handle
+
+    def holds(self, handle) -> bool:
+        return isinstance(handle, jax.Array)
+
+
+class JaxHostBackend(MemoryBackend):
+    """Host memory via memory-kind shardings (pinned_host / unpinned_host)."""
+
+    def __init__(self, device=None, kind: Optional[str] = None) -> None:
+        self.device = device if device is not None else jax.devices()[0]
+        self.kind = kind if kind is not None else host_memory_kind(self.device)
+        if self.kind is None:
+            raise ValueError(
+                f"device {self.device} addresses no host memory kind; "
+                "use NumpyHostBackend")
+        self.name = f"jax-host[{self.kind}]"
+        self._host = jax.sharding.SingleDeviceSharding(
+            self.device, memory_kind=self.kind)
+        self._dev = device_sharding(self.device)
+
+    def put(self, value) -> jax.Array:
+        return jax.device_put(value, self._host)
+
+    def get(self, handle) -> jax.Array:
+        return jax.device_put(handle, self._dev)
+
+    def holds(self, handle) -> bool:
+        return getattr(getattr(handle, "sharding", None),
+                       "memory_kind", None) == self.kind
+
+
+class NumpyHostBackend(MemoryBackend):
+    """Plain NumPy host buffers — the simulated remote pool, and the
+    last-resort host tier on platforms with no memory-kind support.
+    ``np.asarray`` blocks until the device→host copy lands, so a handle is
+    always a fully materialized host buffer."""
+
+    name = "numpy-host"
+
+    def __init__(self, device=None) -> None:
+        self.device = device if device is not None else jax.devices()[0]
+        self._dev = device_sharding(self.device)
+
+    def put(self, value) -> np.ndarray:
+        return np.asarray(value)
+
+    def get(self, handle) -> jax.Array:
+        return jax.device_put(handle, self._dev)
+
+    def holds(self, handle) -> bool:
+        return isinstance(handle, np.ndarray)
+
+
+def make_host_backend(device=None) -> MemoryBackend:
+    """The best host-tier backend this platform supports."""
+    if host_memory_kind(device) is not None:
+        return JaxHostBackend(device)
+    return NumpyHostBackend(device)
+
+
+def make_backend(tier: str, device=None) -> MemoryBackend:
+    if tier == DEVICE_TIER:
+        return DeviceBackend(device)
+    if tier == HOST_TIER:
+        return make_host_backend(device)
+    if tier == REMOTE_TIER:
+        return NumpyHostBackend(device)
+    raise ValueError(f"unknown tier {tier!r}")

@@ -1,0 +1,253 @@
+"""Capacity-tracked memory-pool manager over the tiered backends.
+
+``MemoryPoolManager`` owns an ordered sequence of tiers (host → remote by
+default, optionally device-HBM first). Each ``put`` is charged against the
+tier's byte capacity; when a tier is full, victims are chosen by
+(planner priority, then LRU) among unpinned entries and **spilled** to the
+next tier down — the paper's hierarchy: HBM overflows to the local host
+pool, the host pool overflows to the remote pooled-DRAM tier. Only when
+the last tier is full does a put fail with ``PoolCapacityError``.
+
+Priorities are the planner's hint channel: the executor can mark a tensor
+it will prefetch soon with a high priority so reactive churn never evicts
+it — the graph-driven/reactive distinction at the heart of the paper.
+
+All traffic is counted (puts/gets/evictions, bytes in/out, per-tier
+occupancy and high-water mark); serving and benchmarks surface these via
+``stats.snapshot()``.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.pool import backend as B
+from repro.pool.transfer import TransferEngine, TransferHandle
+
+
+class PoolCapacityError(RuntimeError):
+    """Every tier is full (after spilling) — the put cannot be honored."""
+
+
+@dataclass
+class PoolEntry:
+    key: str
+    tier: str
+    handle: Any
+    nbytes: int
+    priority: float = 0.0      # higher → evicted later (planner hint)
+    pinned: bool = False
+    last_use: int = 0          # LRU clock
+
+
+@dataclass
+class TierState:
+    name: str
+    backend: B.MemoryBackend
+    capacity: Optional[int] = None     # bytes; None → unbounded
+    used: int = 0
+    peak: int = 0
+
+    def room_for(self, nbytes: int) -> bool:
+        return self.capacity is None or self.used + nbytes <= self.capacity
+
+
+@dataclass
+class PoolStats:
+    puts: int = 0
+    gets: int = 0
+    evictions: int = 0
+    drops: int = 0
+    bytes_stored: int = 0
+    bytes_fetched: int = 0
+    bytes_evicted: int = 0
+
+    def snapshot(self) -> Dict[str, float]:
+        return dict(self.__dict__)
+
+
+class MemoryPoolManager:
+    def __init__(self, tiers: Sequence[TierState],
+                 transfer: Optional[TransferEngine] = None) -> None:
+        if not tiers:
+            raise ValueError("need at least one tier")
+        self.tiers: Dict[str, TierState] = {t.name: t for t in tiers}
+        self.spill_order: List[str] = [t.name for t in tiers]
+        self.entries: Dict[str, PoolEntry] = {}
+        self.transfer = transfer or TransferEngine()
+        self.stats = PoolStats()
+        self._clock = 0
+        self._lock = threading.RLock()
+
+    # -- storing -------------------------------------------------------
+    def put(self, key: str, value, tier: str = B.HOST_TIER, *,
+            priority: float = 0.0, pinned: bool = False) -> PoolEntry:
+        """Store ``value`` into ``tier``, evicting (spilling down-hierarchy)
+        as needed. Re-putting an existing key replaces it; if the new value
+        doesn't fit, the old entry survives untouched."""
+        with self._lock:
+            st = self._tier(tier)
+            nbytes = int(value.nbytes)
+            old = self.entries.pop(key, None)
+            if old is not None:
+                self._tier(old.tier).used -= old.nbytes
+            try:
+                self._make_room(st, nbytes)
+            except PoolCapacityError:
+                if old is not None:   # restore — a failed put loses nothing
+                    self.entries[key] = old
+                    self._tier(old.tier).used += old.nbytes
+                raise
+            handle = st.backend.put(value)
+            self._clock += 1
+            entry = PoolEntry(key=key, tier=tier, handle=handle,
+                              nbytes=nbytes, priority=priority,
+                              pinned=pinned, last_use=self._clock)
+            self.entries[key] = entry
+            st.used += nbytes
+            st.peak = max(st.peak, st.used)
+            self.stats.puts += 1
+            self.stats.bytes_stored += nbytes
+            return entry
+
+    # -- fetching ------------------------------------------------------
+    def get(self, key: str):
+        """Materialize the entry on device (synchronous)."""
+        with self._lock:
+            entry = self.entries[key]
+            self._clock += 1
+            entry.last_use = self._clock
+            self.stats.gets += 1
+            self.stats.bytes_fetched += entry.nbytes
+            backend, handle = self._tier(entry.tier).backend, entry.handle
+        return backend.get(handle)
+
+    def prefetch(self, key: str) -> TransferHandle:
+        """Issue an async device fetch through the transfer engine; the
+        returned handle's ``wait()`` yields the device array."""
+        with self._lock:
+            entry = self.entries[key]   # fail fast on unknown keys
+            backend, handle = self._tier(entry.tier).backend, entry.handle
+
+        def fetch():
+            with self._lock:
+                self._clock += 1
+                entry.last_use = self._clock
+                self.stats.gets += 1
+                self.stats.bytes_fetched += entry.nbytes
+            return backend.get(handle)
+
+        return self.transfer.submit(fetch, key=key)
+
+    # -- bookkeeping ---------------------------------------------------
+    def close(self) -> None:
+        """Drain and shut down the transfer engine's worker threads."""
+        self.transfer.close()
+
+    def drop(self, key: str) -> None:
+        with self._lock:
+            self._forget(key)
+            self.stats.drops += 1
+
+    def pin(self, key: str, pinned: bool = True) -> None:
+        with self._lock:
+            self.entries[key].pinned = pinned
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.entries
+
+    def tier_of(self, key: str) -> str:
+        return self.entries[key].tier
+
+    def is_host_resident(self, key: str) -> bool:
+        """The entry lives off-device AND its handle checks out where its
+        tier claims (device-tier entries are never 'host resident')."""
+        entry = self.entries[key]
+        st = self._tier(entry.tier)
+        return (not isinstance(st.backend, B.DeviceBackend)
+                and st.backend.holds(entry.handle))
+
+    def occupancy(self, tier: str) -> Tuple[int, Optional[int]]:
+        st = self._tier(tier)
+        return st.used, st.capacity
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Stats + per-tier occupancy, for benchmarks/serving to print."""
+        with self._lock:
+            out: Dict[str, Any] = self.stats.snapshot()
+            out["transfer"] = self.transfer.stats.snapshot()
+            for name, st in self.tiers.items():
+                out[f"tier/{name}"] = {
+                    "backend": st.backend.name, "used": st.used,
+                    "peak": st.peak, "capacity": st.capacity,
+                    "entries": sum(1 for e in self.entries.values()
+                                   if e.tier == name),
+                }
+            return out
+
+    # -- internals -----------------------------------------------------
+    def _tier(self, name: str) -> TierState:
+        try:
+            return self.tiers[name]
+        except KeyError:
+            raise KeyError(f"unknown tier {name!r}; have {list(self.tiers)}")
+
+    def _forget(self, key: str) -> None:
+        entry = self.entries.pop(key)
+        self._tier(entry.tier).used -= entry.nbytes
+
+    def _next_tier(self, name: str) -> Optional[str]:
+        i = self.spill_order.index(name)
+        return self.spill_order[i + 1] if i + 1 < len(self.spill_order) else None
+
+    def _make_room(self, st: TierState, nbytes: int) -> None:
+        while not st.room_for(nbytes):
+            victim = self._pick_victim(st.name)
+            if victim is None:
+                raise PoolCapacityError(
+                    f"tier {st.name!r}: need {nbytes} bytes, "
+                    f"{st.used}/{st.capacity} used, nothing evictable")
+            self._evict(victim)
+
+    def _pick_victim(self, tier: str) -> Optional[PoolEntry]:
+        candidates = [e for e in self.entries.values()
+                      if e.tier == tier and not e.pinned]
+        if not candidates:
+            return None
+        # lowest planner priority first; LRU breaks ties
+        return min(candidates, key=lambda e: (e.priority, e.last_use))
+
+    def _evict(self, entry: PoolEntry) -> None:
+        """Spill one entry to the next tier down (or fail at the bottom)."""
+        dst = self._next_tier(entry.tier)
+        if dst is None:
+            raise PoolCapacityError(
+                f"cannot evict {entry.key!r}: {entry.tier!r} is the last tier")
+        src_st, dst_st = self._tier(entry.tier), self._tier(dst)
+        self._make_room(dst_st, entry.nbytes)
+        entry.handle = dst_st.backend.put(entry.handle)
+        src_st.used -= entry.nbytes
+        dst_st.used += entry.nbytes
+        dst_st.peak = max(dst_st.peak, dst_st.used)
+        entry.tier = dst
+        self.stats.evictions += 1
+        self.stats.bytes_evicted += entry.nbytes
+
+
+# ---------------------------------------------------------------------------
+
+
+def default_pool(host_capacity: Optional[int] = None,
+                 remote_capacity: Optional[int] = None,
+                 device_capacity: Optional[int] = None,
+                 device=None,
+                 transfer: Optional[TransferEngine] = None) -> MemoryPoolManager:
+    """The standard three-tier pool: device HBM → host → simulated remote."""
+    tiers = [
+        TierState(B.DEVICE_TIER, B.DeviceBackend(device), device_capacity),
+        TierState(B.HOST_TIER, B.make_host_backend(device), host_capacity),
+        TierState(B.REMOTE_TIER, B.NumpyHostBackend(device), remote_capacity),
+    ]
+    return MemoryPoolManager(tiers, transfer=transfer)

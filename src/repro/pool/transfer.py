@@ -1,0 +1,162 @@
+"""Async double-buffered transfer engine with explicit wait handles.
+
+The planner's whole premise is that Prefetch traffic overlaps compute; a
+synchronous ``device_put`` at the use site serializes it instead. This
+engine issues transfers on worker threads ahead of use and hands back a
+``TransferHandle`` the consumer waits on — the runtime analogue of the
+timeline simulator's copy-stream model. ``depth`` bounds in-flight
+transfers (classic double buffering at the default of 2): submitting past
+the bound first retires the oldest outstanding transfer, so a runaway
+prefetcher cannot flood host bandwidth or pile up staging buffers.
+
+Stats distinguish waits that found the transfer already complete (fully
+overlapped) from waits that blocked (exposed transfer time) — the runtime
+counterpart of ``Timeline.exposed_comm``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, Optional
+
+
+@dataclass
+class TransferStats:
+    issued: int = 0
+    completed: int = 0
+    waits_overlapped: int = 0   # consumer wait() found the transfer done
+    waits_blocked: int = 0      # consumer wait() had to block (exposed time)
+    blocked_s: float = 0.0      # total consumer-exposed transfer time
+    backpressure_waits: int = 0  # submits stalled by a full pipeline
+    backpressure_s: float = 0.0  # time submit() spent retiring transfers
+    max_in_flight: int = 0
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "issued": self.issued, "completed": self.completed,
+            "waits_overlapped": self.waits_overlapped,
+            "waits_blocked": self.waits_blocked,
+            "blocked_s": self.blocked_s,
+            "backpressure_waits": self.backpressure_waits,
+            "backpressure_s": self.backpressure_s,
+            "max_in_flight": self.max_in_flight,
+        }
+
+
+class TransferHandle:
+    """One in-flight transfer. ``wait()`` returns its value (idempotent)."""
+
+    def __init__(self, key: Optional[str], seq: int, future: "Future",
+                 engine: "TransferEngine") -> None:
+        self.key = key
+        self.seq = seq          # issue order — lets tests assert issue-before-wait
+        self._future = future
+        self._engine = engine
+        self._waited = False
+
+    @property
+    def done(self) -> bool:
+        return self._future.done()
+
+    def wait(self) -> Any:
+        """Idempotent; only the first wait is charged to the stats, so
+        re-waiting (or an engine-internal retirement) never double-counts."""
+        was_done = self._future.done()
+        t0 = time.perf_counter()
+        value = self._future.result()
+        if not self._waited:
+            self._waited = True
+            self._engine._record_wait(was_done, time.perf_counter() - t0)
+        return value
+
+    def __repr__(self) -> str:
+        state = "done" if self.done else "in-flight"
+        return f"TransferHandle({self.key!r}, seq={self.seq}, {state})"
+
+
+class TransferEngine:
+    def __init__(self, depth: int = 2, workers: int = 2) -> None:
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        self.depth = depth
+        self._pool = ThreadPoolExecutor(max_workers=workers,
+                                        thread_name_prefix="pool-xfer")
+        self._in_flight: Deque[TransferHandle] = deque()
+        self._lock = threading.Lock()
+        self._seq = 0
+        self.stats = TransferStats()
+
+    # ------------------------------------------------------------------
+    def submit(self, fn: Callable[[], Any], key: Optional[str] = None
+               ) -> TransferHandle:
+        """Issue ``fn`` (a transfer thunk) asynchronously. Blocks on the
+        oldest outstanding transfer first when the pipeline is full —
+        charged to backpressure stats, not consumer-exposed time (the
+        consumer's own later wait() on that handle still counts normally).
+        Thread-safe: concurrent submitters share the depth bound."""
+
+        def run():
+            try:
+                return fn()
+            finally:
+                with self._lock:
+                    self.stats.completed += 1
+
+        while True:
+            with self._lock:
+                self._reap_locked()
+                if len(self._in_flight) < self.depth:
+                    self._seq += 1
+                    self.stats.issued += 1
+                    handle = TransferHandle(key, self._seq,
+                                            self._pool.submit(run), self)
+                    self._in_flight.append(handle)
+                    self.stats.max_in_flight = max(self.stats.max_in_flight,
+                                                   len(self._in_flight))
+                    return handle
+                oldest = self._in_flight.popleft()
+            # never block on a future while holding the lock — the worker's
+            # completion accounting needs it. A failed transfer's exception
+            # belongs to its own handle's wait(), not to this submitter.
+            t0 = time.perf_counter()
+            try:
+                oldest._future.result()
+            except Exception:
+                pass
+            with self._lock:
+                self.stats.backpressure_waits += 1
+                self.stats.backpressure_s += time.perf_counter() - t0
+
+    def drain(self) -> None:
+        """Retire every outstanding transfer. Failed transfers don't stop
+        the drain — their exceptions stay with their handles."""
+        while True:
+            with self._lock:
+                if not self._in_flight:
+                    return
+                oldest = self._in_flight.popleft()
+            try:
+                oldest.wait()
+            except Exception:
+                pass
+
+    def close(self) -> None:
+        self.drain()
+        self._pool.shutdown(wait=True)
+
+    # ------------------------------------------------------------------
+    def _reap_locked(self) -> None:
+        while self._in_flight and self._in_flight[0].done:
+            self._in_flight.popleft()
+
+    def _record_wait(self, was_done: bool, blocked_s: float) -> None:
+        with self._lock:
+            if was_done:
+                self.stats.waits_overlapped += 1
+            else:
+                self.stats.waits_blocked += 1
+                self.stats.blocked_s += blocked_s

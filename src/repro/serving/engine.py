@@ -3,12 +3,14 @@
 Modes:
 - resident (default): the KV cache stays in device memory — the paper's
   inference baseline.
-- ``offload_kv=True``: between decode steps the cache is parked in host
-  (remote-pool) memory and fetched back on entry — the whole-cache
-  Store/Prefetch round trip. On real hardware the fetch overlaps the
-  embedding/projection work per the compiler plan; here we validate
-  semantics and count traffic. (The page-granular sparse path lives in
-  offload.kvcache.PagedKVCache and examples/serve_offload.py.)
+- ``offload_kv=True``: between decode steps the cache is parked in the
+  memory pool's host tier and prefetched back through the async transfer
+  engine — the whole-cache Store/Prefetch round trip, with per-leaf
+  capacity accounting and traffic stats from the ``MemoryPoolManager``.
+  On real hardware the fetch overlaps the embedding/projection work per
+  the compiler plan; here we validate semantics and count traffic. (The
+  page-granular sparse path lives in offload.kvcache.PagedKVCache and
+  examples/serve_offload.py.)
 
 Batching: one uniform-length prompt batch per generate() call (bucketed
 batching; ragged prompts are padded upstream by the caller).
@@ -17,13 +19,14 @@ batching; ragged prompts are padded upstream by the caller).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model
-from repro.offload.optstate import device_fetch_state, host_offload_state
+from repro.pool import HOST_TIER, MemoryPoolManager, TransferEngine, default_pool
 from repro.serving.sampling import sample_token
 
 
@@ -34,19 +37,57 @@ class ServeStats:
     cache_round_trips: int = 0
 
 
+# per-engine pool-key namespace: engines sharing one pool never collide
+_ENGINE_IDS = itertools.count()
+
+
 class ServeEngine:
     def __init__(self, model: Model, params: Any, *, max_seq: int,
-                 cache_dtype=jnp.float32, offload_kv: bool = False) -> None:
+                 cache_dtype=jnp.float32, offload_kv: bool = False,
+                 pool: Optional[MemoryPoolManager] = None) -> None:
         self.model = model
         self.params = params
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
         self.offload_kv = offload_kv
+        # transfer depth sized so one whole cache's leaves (2 per layer,
+        # plus headroom) issue before any wait — depth still bounds staging
+        depth = 4 * getattr(getattr(model, "cfg", None), "n_layers", 16)
+        self._owns_pool = pool is None and offload_kv
+        self.pool = pool if pool is not None else (
+            default_pool(transfer=TransferEngine(depth=depth))
+            if offload_kv else None)
+        self._key_ns = f"serve{next(_ENGINE_IDS)}"
         self.stats = ServeStats()
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
 
+    def pool_stats(self) -> Optional[Dict[str, Any]]:
+        """Pool traffic/occupancy snapshot (None when serving resident)."""
+        return self.pool.snapshot() if self.pool is not None else None
+
+    def close(self) -> None:
+        """Shut down the pool's transfer workers, if this engine owns the
+        pool (a caller-provided pool is the caller's to close)."""
+        if self._owns_pool:
+            self.pool.close()
+
     # ------------------------------------------------------------------
+    def _cache_round_trip(self, cache: Any) -> Any:
+        """Store every cache leaf into the pool, then prefetch them all
+        back through the transfer engine (fetches issue before any wait).
+        Entries are dropped once fetched — the host copy is transient."""
+        leaves, treedef = jax.tree.flatten(cache)
+        keys = [f"{self._key_ns}/kv{i}" for i in range(len(leaves))]
+        for k, leaf in zip(keys, leaves):
+            self.pool.put(k, leaf, HOST_TIER)
+        handles = [self.pool.prefetch(k) for k in keys]
+        self.stats.cache_round_trips += 1
+        fetched = [h.wait() for h in handles]
+        for k in keys:
+            self.pool.drop(k)
+        return jax.tree.unflatten(treedef, fetched)
+
     def generate(self, batch: Dict[str, jax.Array], max_new_tokens: int, *,
                  temperature: float = 0.0, top_k: Optional[int] = None,
                  seed: int = 0) -> jax.Array:
@@ -66,9 +107,7 @@ class ServeEngine:
         for i in range(1, max_new_tokens):
             pos = jnp.int32(s0 + i - 1)
             if self.offload_kv:
-                cache = host_offload_state(cache)       # Store
-                cache = device_fetch_state(cache)       # Prefetch (next step)
-                self.stats.cache_round_trips += 1
+                cache = self._cache_round_trip(cache)   # Store + Prefetch
             key, sub = jax.random.split(key)
             logits, cache = self._decode(self.params, cache, tok[:, None], pos)
             tok = sample_token(logits[:, 0], sub, temperature=temperature,

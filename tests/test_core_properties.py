@@ -1,5 +1,9 @@
 """Hypothesis property tests on HyperOffload's core invariants."""
 
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed; property tests skipped")
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -12,6 +12,7 @@ from repro.data.pipeline import SyntheticTokens
 from repro.models.model import build_model
 from repro.offload.kvcache import PagedKVCache
 from repro.offload.optstate import device_fetch_state, host_offload_state
+from repro.pool.backend import is_host_resident
 from repro.kernels.ref import decode_attention_ref
 from repro.serving.engine import ServeEngine
 from repro.training.step import TrainStepConfig, init_train_state, make_train_step
@@ -38,8 +39,8 @@ def test_offload_training_bitwise_matches_resident():
     assert l_res == pytest.approx(l_off, abs=1e-6)
     for a, b in zip(jax.tree.leaves(p_res), jax.tree.leaves(p_off)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    # moments really live in host memory
-    assert jax.tree.leaves(opt_off.mu)[0].sharding.memory_kind == "pinned_host"
+    # moments really live in host memory (probed kind; NumPy as last resort)
+    assert all(is_host_resident(x) for x in jax.tree.leaves(opt_off.mu))
 
 
 def test_full_remat_matches_no_remat():
@@ -52,8 +53,7 @@ def test_host_offload_round_trip_preserves_values():
     tree = {"a": jnp.arange(128.0).reshape(8, 16),
             "b": jnp.ones((4,), jnp.bfloat16)}
     parked = host_offload_state(tree)
-    assert all(x.sharding.memory_kind == "pinned_host"
-               for x in jax.tree.leaves(parked))
+    assert all(is_host_resident(x) for x in jax.tree.leaves(parked))
     back = device_fetch_state(parked)
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -69,6 +69,11 @@ def test_serving_offload_kv_equals_resident():
     off = off_engine.generate(prompt, 8)
     np.testing.assert_array_equal(np.asarray(res), np.asarray(off))
     assert off_engine.stats.cache_round_trips == 7
+    # real traffic went through the pool manager
+    pool = off_engine.pool_stats()
+    assert pool["puts"] > 0 and pool["bytes_stored"] > 0
+    assert pool["gets"] > 0 and pool["bytes_fetched"] > 0
+    assert pool["transfer"]["issued"] > 0
 
 
 # ---------------------------------------------------------------------------
@@ -117,7 +122,9 @@ def test_paged_kvcache_append_flush_and_sparse_selection():
     assert out.shape == (b, hq, d)
     assert not bool(jnp.isnan(out).any())
     assert cache.fetches >= 1
-    # pool pages really live in host memory
-    assert all(p.sharding.memory_kind == "pinned_host"
-               for p in cache.k_pool if p is not None)
-    assert any(p is not None for p in cache.k_pool)
+    # pool pages really live in the manager's host tier
+    assert any(k is not None for k in cache.k_pool)
+    assert all(cache.pool.tier_of(k) == "host" and cache.pool.is_host_resident(k)
+               for k in cache.k_pool if k is not None)
+    stats = cache.pool_stats()
+    assert stats["bytes_stored"] > 0 and stats["bytes_fetched"] > 0
