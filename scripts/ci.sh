@@ -9,3 +9,8 @@ if ! python -c "import jax, numpy, pytest" 2>/dev/null; then
 fi
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+# serving perf smoke: continuous vs static batching on a mixed-length
+# Poisson trace; summary accumulates in BENCH_serving.json
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/serve_continuous.py --smoke --out BENCH_serving.json

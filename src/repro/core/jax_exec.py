@@ -1,18 +1,15 @@
-"""Execute an offload plan on real JAX arrays.
+"""Synchronous plan execution on real JAX arrays — thin wrapper over
+``pool.executor.OffloadPlanExecutor``.
 
-Lowers the IR's cache operators to genuine JAX memory-kind transfers:
-``prefetch`` = ``jax.device_put(host_copy, device-memory sharding)``,
-``store`` = ``jax.device_put(x, pinned_host sharding)``, ``detach`` = drop
-the device reference. Compute nodes bind to user-supplied callables. The
-executor asserts the same IR legality rules the simulator uses, so a plan
-that validates in the compiler also runs — and produces values identical to
-the everything-resident baseline (tests/test_jax_exec.py).
-
-XLA dispatches ``device_put`` asynchronously; on real TPU hardware the
-transfer engines run under compute exactly as the timeline simulator
-models. On the CPU test backend the memory kinds exist but transfers are
-synchronous copies — correctness is what we validate here, overlap is what
-the simulator + dry-run quantify.
+The seed carried two node-walk dispatch loops over the same IR semantics:
+this module's original executor (sync ``device_put`` per cache op) and the
+pool executor (async transfers + residency ledger). They are now folded:
+``PlanExecutor`` keeps the seed-era API — all compute fns must be bound,
+``run`` returns one flat environment in which host-parked tensors reappear
+under their names — but every cache operator is driven by the
+``MemoryPoolManager``'s tiered backends and transfer engine. A plan that
+validates in the compiler still runs, and produces values identical to the
+everything-resident baseline (tests/test_substrates.py).
 """
 
 from __future__ import annotations
@@ -22,19 +19,23 @@ from typing import Callable, Dict, Mapping, Optional, Sequence
 import jax
 
 from repro.core.ir import Graph
-from repro.pool import backend as pool_backend
+from repro.pool.executor import OffloadPlanExecutor
+from repro.pool.manager import MemoryPoolManager, default_pool
 
 
 class PlanExecutor:
+    """Sync facade: validates fn bindings eagerly, owns a throwaway pool
+    per ``run`` unless one is injected, and waits every transfer before
+    returning."""
+
     def __init__(self, graph: Graph,
                  compute_fns: Mapping[str, Callable],
-                 device: Optional[jax.Device] = None) -> None:
+                 device: Optional[jax.Device] = None,
+                 pool: Optional[MemoryPoolManager] = None) -> None:
         self.graph = graph
         self.fns = dict(compute_fns)
         self.device = device or jax.devices()[0]
-        self.dev_sharding = pool_backend.device_sharding(self.device)
-        # probed host kind; None → NumPy host buffers (pool.backend fallback)
-        self.host_sharding = pool_backend.host_sharding(self.device)
+        self._pool = pool
         missing = [n for n, node in graph.nodes.items()
                    if node.kind == "compute" and n not in self.fns]
         if missing:
@@ -43,52 +44,29 @@ class PlanExecutor:
     def run(self, inputs: Mapping[str, jax.Array],
             order: Optional[Sequence[str]] = None) -> Dict[str, jax.Array]:
         """``inputs`` must provide every tensor with no producer (weights,
-        states, graph inputs). Returns the final environment (device-resident
-        tensors) plus host-parked tensors under their names."""
-        graph = self.graph
-        order = list(order) if order is not None else graph.order()
-        graph.validate_order(order)
-
-        def to_host(x):
-            if self.host_sharding is None:
-                return pool_backend.to_host(x, self.device)
-            return jax.device_put(x, self.host_sharding)
-
-        env: Dict[str, jax.Array] = {}
-        host: Dict[str, jax.Array] = {}
-        for t, info in graph.tensors.items():
-            if t in inputs:
-                if info.initial_location == "remote":
-                    host[t] = to_host(inputs[t])
-                else:
-                    env[t] = jax.device_put(inputs[t], self.dev_sharding)
-
-        produced = set(env) | set(host)
-        for name in order:
-            node = graph.nodes[name]
-            if node.kind == "compute":
-                args = [env[t] for t in node.inputs]
-                outs = self.fns[name](*args)
-                if not isinstance(outs, (tuple, list)):
-                    outs = (outs,)
-                if len(outs) != len(node.outputs):
-                    raise ValueError(
-                        f"{name}: fn returned {len(outs)} values, node declares "
-                        f"{len(node.outputs)} outputs")
-                for t, v in zip(node.outputs, outs):
-                    env[t] = v
-                    produced.add(t)
-            elif node.kind == "prefetch":
-                env[node.tensor] = jax.device_put(host[node.tensor], self.dev_sharding)
-            elif node.kind == "store":
-                host[node.tensor] = to_host(env[node.tensor])
-            elif node.kind == "detach":
-                env.pop(node.tensor, None)
-
-        result = dict(env)
-        for t, v in host.items():
-            result.setdefault(t, v)
-        return result
+        states, graph inputs). Returns the final environment: device-resident
+        tensors plus pool-parked tensors under their names."""
+        own_pool = self._pool is None
+        pool = self._pool if self._pool is not None else default_pool(
+            device=self.device)
+        ex = OffloadPlanExecutor(self.graph, pool, self.fns)
+        try:
+            env, _ = ex.run(inputs, order)
+            result = dict(env)
+            for t in self.graph.tensors:
+                if t not in result and ex._key(t) in pool:
+                    result[t] = pool.get(ex._key(t))
+            return result
+        finally:
+            # sync contract: nothing outlives the call — parked entries are
+            # surfaced in the result above, so drop them from the pool (an
+            # injected pool would otherwise accumulate one exec<N>/ copy of
+            # every offloaded tensor per run)
+            for t in self.graph.tensors:
+                if ex._key(t) in pool:
+                    pool.drop(ex._key(t))
+            if own_pool:
+                pool.close()
 
 
 def run_baseline(graph: Graph, compute_fns: Mapping[str, Callable],

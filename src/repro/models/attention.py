@@ -368,7 +368,7 @@ def attention_decode(
     spec: LayerSpec,
     p: Dict,
     x: jax.Array,           # (B, 1, D)
-    pos: jax.Array,         # scalar int32: index of the token being written
+    pos: jax.Array,         # scalar int32 — or (B,) per-row write positions
     positions: jax.Array,   # (B, 1) or (3, B, 1) rope positions of this token
     cache: Dict,
     *,
@@ -386,14 +386,13 @@ def attention_decode(
         sections = cfg.mrope_sections if cfg.rope_mode == "mrope" else None
         q = apply_rope(q, positions, cfg.rope_theta, sections)
         k = apply_rope(k, positions, cfg.rope_theta, sections)
-    slot = jnp.mod(pos, c)
-    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    new_k = _ring_write_token(cache["k"], k, pos)
+    new_v = _ring_write_token(cache["v"], v, pos)
     scale = cfg.query_scale if cfg.query_scale is not None else hd ** -0.5
     scores = _gqa_scores(q, new_k) * scale       # (B,1,Hq,C)
     scores = softcap(scores, cfg.attn_logit_softcap)
-    valid = _ring_valid_mask(pos, c)             # (C,)
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    valid = _ring_valid_mask(pos, c)             # (C,) or (B,C)
+    scores = _apply_valid_mask(scores, valid)
     probs = jax.nn.softmax(scores, axis=-1)
     out = _gqa_out(probs, new_v).astype(x.dtype).reshape(b, 1, hq * hd)
     out = out @ p["wo"]
@@ -416,11 +415,38 @@ def _ring_valid_mask(pos: jax.Array, c: int) -> jax.Array:
     """Which ring slots hold live tokens once token ``pos`` is written.
 
     Slot j holds token t_j = pos - ((pos - j) mod C); valid iff t_j >= 0.
-    For a full (non-ring) cache this reduces to j <= pos.
+    For a full (non-ring) cache this reduces to j <= pos. ``pos`` may be a
+    scalar (uniform batch) → (C,), or per-row (B,) → (B, C).
     """
     j = jnp.arange(c)
-    t = pos - jnp.mod(pos - j, c)
+    p = pos[..., None]              # () -> (1,), (B,) -> (B, 1)
+    t = p - jnp.mod(p - j, c)
     return t >= 0
+
+
+def _apply_valid_mask(scores: jax.Array, valid: jax.Array) -> jax.Array:
+    """Mask decode scores (B,1,H,C) with a (C,) or per-row (B,C) mask."""
+    if valid.ndim == 1:
+        valid = valid[None, None, None, :]
+    else:
+        valid = valid[:, None, None, :]
+    return jnp.where(valid, scores, NEG_INF)
+
+
+def _ring_write_token(buf: jax.Array, vals: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write one token's entries (B,1,...) into the ring buffer (B,C,...).
+
+    Scalar ``pos`` writes every row at the same slot (uniform batch); a
+    (B,) ``pos`` writes row i at its own slot ``pos[i] % C`` — the
+    continuous-batching case where requests sit at different positions.
+    """
+    c = buf.shape[1]
+    vals = vals.astype(buf.dtype)
+    if jnp.ndim(pos) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, vals, jnp.mod(pos, c),
+                                                   axis=1)
+    b = buf.shape[0]
+    return buf.at[jnp.arange(b), jnp.mod(pos, c)].set(vals[:, 0])
 
 
 def _mla_decode(cfg, p, x, pos, positions, cache):
@@ -435,11 +461,8 @@ def _mla_decode(cfg, p, x, pos, positions, cache):
     qr = apply_rope(qr, positions, cfg.rope_theta)
     ckv_t = rmsnorm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)
     kr_t = apply_rope((x @ p["wkr"])[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
-    slot = jnp.mod(pos, c)
-    new_ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache["ckv"], ckv_t.astype(cache["ckv"].dtype), slot, axis=1)
-    new_kr = jax.lax.dynamic_update_slice_in_dim(
-        cache["krope"], kr_t.astype(cache["krope"].dtype), slot, axis=1)
+    new_ckv = _ring_write_token(cache["ckv"], ckv_t, pos)
+    new_kr = _ring_write_token(cache["krope"], kr_t, pos)
     kv = (new_ckv @ p["wukv"]).reshape(b, c, h, dn + dv)
     kn, v = kv[..., :dn], kv[..., dn:]
     scale = (dn + dr) ** -0.5
@@ -447,7 +470,7 @@ def _mla_decode(cfg, p, x, pos, positions, cache):
     sc += jnp.einsum("bshd,btd->bsht", qr.astype(jnp.float32), new_kr.astype(jnp.float32))
     sc *= scale
     valid = _ring_valid_mask(pos, c)
-    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    sc = _apply_valid_mask(sc, valid)
     probs = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bsht,bthd->bshd", probs, v.astype(jnp.float32))
     out = out.astype(x.dtype).reshape(b, 1, h * dv)

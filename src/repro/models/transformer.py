@@ -268,12 +268,17 @@ def decode_step(
     params: Dict,
     cache: Dict,
     token: jax.Array,   # (B, 1) int32
-    pos: jax.Array,     # scalar int32 — index being written
+    pos: jax.Array,     # scalar int32 — or (B,) per-row indices being written
     *,
     swa_override: Optional[int] = None,
     inplace: bool = True,
 ) -> Tuple[jax.Array, Dict]:
     """One autoregressive step. Returns (logits (B,1,V), new cache).
+
+    ``pos`` may be a scalar (uniform batch — every row writes the same
+    index) or a (B,) vector (continuous batching — each row sits at its own
+    sequence position; rows are independent, so per-row results equal the
+    corresponding single-request decode).
 
     ``inplace=True`` (default) threads the stacked cache through the layer
     scan as a CARRY updated with dynamic slice writes — the while-loop state
@@ -282,7 +287,10 @@ def decode_step(
     double-buffers the whole cache (≈2.6× cache in scratch) and exists as
     the recorded §Perf hillclimb-C baseline."""
     b = token.shape[0]
-    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    if jnp.ndim(pos) == 0:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    else:
+        positions = pos.astype(jnp.int32)[:, None]
     if cfg.rope_mode == "mrope":
         positions = jnp.broadcast_to(positions[None], (3, b, 1))
     x = embed_tokens(cfg, params, token, positions)

@@ -42,6 +42,74 @@ NEG_INF = -2.3819763e38
 _CACHE_IDS = itertools.count()
 
 
+class KVPageTable:
+    """One request's KV pages in the pool — the serving scheduler's
+    per-request page table (``sched.requests``).
+
+    Each page is one (layer, leaf) row of the request's slice of the
+    stacked decode cache, stored under a request-stable key: re-parking a
+    page replaces the entry in place (no key churn), and the pool's
+    priority+LRU manager decides *where* it lives — pages are parked hot
+    (device tier, priority = recency), and under capacity pressure cold
+    sequences' pages spill to the host tier, then to remote, without the
+    table noticing. Capacity admission for the table happens up front via
+    ``MemoryPoolManager.reserve`` (see ``sched.queue``), sized by
+    ``worst_case_page_bytes`` — pages the request has not produced yet are
+    charged at their full worst case.
+    """
+
+    def __init__(self, pool: MemoryPoolManager, name: str) -> None:
+        self.pool = pool
+        self.key_ns = f"{name}-{next(_CACHE_IDS)}"
+        self.keys: dict = {}       # page label -> pool key
+        self.parks: int = 0
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+    def key_of(self, label: str) -> str:
+        return self.keys.setdefault(label, f"{self.key_ns}/{label}")
+
+    def park(self, label: str, value: jax.Array, tier: str, *,
+             priority: float = 0.0) -> str:
+        key = self.key_of(label)
+        self.pool.put(key, value, tier, priority=priority)
+        self.parks += 1
+        return key
+
+    def prefetch(self, label: str) -> TransferHandle:
+        return self.pool.prefetch(self.keys[label])
+
+    def fetch(self, label: str) -> jax.Array:
+        return self.pool.get(self.keys[label])
+
+    def tiers(self) -> dict:
+        """label -> tier currently holding the page (spill visibility)."""
+        return {lb: self.pool.tier_of(k) for lb, k in self.keys.items()
+                if k in self.pool}
+
+    def drop(self) -> None:
+        """Retire the request: drop every page still in the pool."""
+        for k in self.keys.values():
+            if k in self.pool:
+                self.pool.drop(k)
+        self.keys.clear()
+
+
+def worst_case_page_bytes(cache_specs) -> int:
+    """Worst-case pool footprint of one request's pages: the full
+    per-request cache row at max_seq (``Model.cache_specs(1, max_seq)``),
+    summed over every leaf. Used by admission control before any page
+    exists."""
+    total = 0
+    for leaf in jax.tree.leaves(cache_specs):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return int(total)
+
+
 @jax.jit
 def _page_summary(k_page: jax.Array) -> jax.Array:
     """(B, page, Hkv, D) -> (B, Hkv, D) mean key."""

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.pool import backend as B
 from repro.pool.transfer import TransferEngine, TransferHandle
@@ -80,6 +80,10 @@ class MemoryPoolManager:
         self.stats = PoolStats()
         self._clock = 0
         self._lock = threading.RLock()
+        # admission ledger: key -> (nbytes, tiers reserved against, covered
+        # key prefix whose entries the reservation pays for)
+        self._reservations: Dict[str, Tuple[int, Tuple[str, ...], Optional[str]]] = {}
+        self._evict_listeners: List[Callable[[PoolEntry, str], None]] = []
 
     # -- storing -------------------------------------------------------
     def put(self, key: str, value, tier: str = B.HOST_TIER, *,
@@ -155,6 +159,101 @@ class MemoryPoolManager:
         with self._lock:
             self.entries[key].pinned = pinned
 
+    # -- admission control (capacity reservation) ----------------------
+    def reserve(self, key: str, nbytes: int,
+                tiers: Optional[Sequence[str]] = None,
+                covers: Optional[str] = None) -> bool:
+        """Reserve ``nbytes`` of worst-case capacity against the combined
+        byte budget of ``tiers`` (default: every tier). This is the serving
+        scheduler's admission-control ledger: a request is admitted only if
+        its worst-case KV pages fit alongside current occupancy plus every
+        standing reservation. Reservations are bookkeeping only — they never
+        block ``put`` (puts spill down-tier by design) — but a put made
+        under a reservation is guaranteed a home in the reserved tiers.
+
+        ``covers`` names a key prefix whose entries this reservation pays
+        for: their occupancy is excluded from the capacity check (they are
+        bounded by — and already charged as — the reservation), so a
+        running request's parked pages aren't double-counted against new
+        admissions.
+
+        Returns False (and records nothing) if it doesn't fit; re-reserving
+        an existing key replaces it. A tier with unbounded capacity makes
+        the reservation always succeed."""
+        with self._lock:
+            tiers = tuple(tiers) if tiers is not None else tuple(self.spill_order)
+            old = self._reservations.pop(key, None)
+            cap, used, unbounded = self._capacity_used(tiers)
+            if not unbounded:
+                held = sum(n for n, ts, _ in self._reservations.values()
+                           if set(ts) & set(tiers))
+                if used + held + int(nbytes) > cap:
+                    if old is not None:
+                        self._reservations[key] = old
+                    return False
+            self._reservations[key] = (int(nbytes), tiers, covers)
+            return True
+
+    def release(self, key: str) -> None:
+        """Drop a reservation (no-op if absent)."""
+        with self._lock:
+            self._reservations.pop(key, None)
+
+    def reserved_bytes(self, tiers: Optional[Sequence[str]] = None) -> int:
+        with self._lock:
+            if tiers is None:
+                return sum(n for n, _, _ in self._reservations.values())
+            want = set(tiers)
+            return sum(n for n, ts, _ in self._reservations.values()
+                       if set(ts) & want)
+
+    def headroom(self, tiers: Sequence[str]) -> Optional[int]:
+        """Free bytes across ``tiers`` after occupancy (reservation-covered
+        entries excluded) and standing reservations (None = unbounded)."""
+        with self._lock:
+            cap, used, unbounded = self._capacity_used(tiers)
+            if unbounded:
+                return None
+            return cap - used - self.reserved_bytes(tiers)
+
+    def _capacity_used(self, tiers: Sequence[str]) -> Tuple[int, int, bool]:
+        """(capacity, occupancy-net-of-covered-entries, any-unbounded)
+        across ``tiers``. Covered entries (key under a reservation's
+        ``covers`` prefix) are bounded by their reservation, which the
+        caller charges separately."""
+        cap = used = 0
+        unbounded = False
+        names = set(tiers)
+        for t in tiers:
+            st = self._tier(t)
+            if st.capacity is None:
+                unbounded = True
+            else:
+                cap += st.capacity
+                used += st.used
+        if not unbounded:
+            prefixes = tuple(c for _, ts, c in self._reservations.values()
+                             if c is not None and set(ts) & names)
+            if prefixes:
+                used -= sum(e.nbytes for e in self.entries.values()
+                            if e.tier in names and e.key.startswith(prefixes))
+        return cap, used, unbounded
+
+    # -- eviction notification -----------------------------------------
+    def add_evict_listener(self, cb: Callable[[PoolEntry, str], None]) -> None:
+        """Register ``cb(entry, dst_tier)``, called after an entry spills
+        down-hierarchy. Called under the pool lock — keep it cheap and
+        don't block (pool methods are safe to call: the lock is reentrant)."""
+        with self._lock:
+            self._evict_listeners.append(cb)
+
+    def remove_evict_listener(self, cb: Callable[[PoolEntry, str], None]) -> None:
+        """Unregister a listener (no-op if absent) — callers sharing a
+        long-lived pool must remove themselves on shutdown."""
+        with self._lock:
+            if cb in self._evict_listeners:
+                self._evict_listeners.remove(cb)
+
     def __contains__(self, key: str) -> bool:
         return key in self.entries
 
@@ -178,6 +277,7 @@ class MemoryPoolManager:
         with self._lock:
             out: Dict[str, Any] = self.stats.snapshot()
             out["transfer"] = self.transfer.stats.snapshot()
+            out["reserved"] = self.reserved_bytes()
             for name, st in self.tiers.items():
                 out[f"tier/{name}"] = {
                     "backend": st.backend.name, "used": st.used,
@@ -234,6 +334,8 @@ class MemoryPoolManager:
         entry.tier = dst
         self.stats.evictions += 1
         self.stats.bytes_evicted += entry.nbytes
+        for cb in self._evict_listeners:
+            cb(entry, dst)
 
 
 # ---------------------------------------------------------------------------

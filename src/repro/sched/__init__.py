@@ -1,0 +1,30 @@
+"""Continuous-batching serving scheduler with plan-driven KV prefetch.
+
+- ``requests``  — ``Request``/``RequestState`` lifecycle (QUEUED → PREFILL
+  → DECODE → DONE) with per-request ``KVPageTable`` page tables;
+- ``queue``     — arrival queue + pool-capacity-aware admission control
+  (device+host tiers must hold a request's worst-case pages);
+- ``scheduler`` — the step loop: joins/retires sequences every decode step,
+  interleaves prefill with decode, parks cold sequences' pages through the
+  pool's priority+LRU manager;
+- ``prefetch``  — plan-driven prefetcher running ``HyperOffloadPlanner``'s
+  refined decode order at serving time: layer *l+1*'s page fetches issue
+  while layer *l*'s are consumed.
+"""
+
+from repro.sched.prefetch import InFlightFetches, PlanPrefetcher, PrefetchStats
+from repro.sched.queue import AdmissionController, ArrivalQueue, poisson_trace
+from repro.sched.requests import (
+    DECODE, DONE, PREFILL, QUEUED, Request, RequestState,
+)
+from repro.sched.scheduler import (
+    ContinuousScheduler, SchedStats, SchedulerConfig,
+)
+
+__all__ = [
+    "QUEUED", "PREFILL", "DECODE", "DONE",
+    "Request", "RequestState",
+    "ArrivalQueue", "AdmissionController", "poisson_trace",
+    "PlanPrefetcher", "PrefetchStats", "InFlightFetches",
+    "ContinuousScheduler", "SchedulerConfig", "SchedStats",
+]

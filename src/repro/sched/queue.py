@@ -1,0 +1,118 @@
+"""Arrival queue and pool-capacity-aware admission control.
+
+Admission follows the SLO-offloading systems the ISSUE cites (Select-N,
+Harvest): a request joins the running batch only if the pool's **device
+tier + host tier** can hold its worst-case KV pages *on top of* current
+occupancy and every already-admitted request's standing reservation
+(``MemoryPoolManager.reserve``). Otherwise it stays QUEUED — the scheduler
+never over-commits, so page parks can always be honored without touching
+the (slow) remote tier.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.pool import DEVICE_TIER, HOST_TIER
+from repro.pool.manager import MemoryPoolManager
+from repro.sched.requests import Request, RequestState
+
+ADMISSION_TIERS = (DEVICE_TIER, HOST_TIER)
+
+
+class ArrivalQueue:
+    """Pending requests ordered by (arrival time, request id) — FIFO among
+    same-time arrivals regardless of submission order, so a future-dated
+    head never shadows an already-arrived later submission."""
+
+    def __init__(self, requests: Sequence[Request] = ()) -> None:
+        self._q: List[RequestState] = []
+        for r in requests:
+            self.push(r)
+
+    def push(self, request: Request) -> RequestState:
+        state = RequestState(request=request)
+        self._q.append(state)
+        self._q.sort(key=lambda s: (s.request.arrival, s.req_id))
+        return state
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def head_ready(self, now: float) -> Optional[RequestState]:
+        """The next request whose arrival time has passed (FIFO), without
+        removing it."""
+        if self._q and self._q[0].request.arrival <= now:
+            return self._q[0]
+        return None
+
+    def pop(self) -> RequestState:
+        return self._q.pop(0)
+
+    def next_arrival(self) -> Optional[float]:
+        return self._q[0].request.arrival if self._q else None
+
+
+class AdmissionController:
+    """Reserves worst-case page capacity in the pool per admitted request;
+    releases it at retirement. ``blocked`` counts admission refusals (the
+    benchmark's queueing-pressure signal)."""
+
+    def __init__(self, pool: MemoryPoolManager,
+                 tiers: Sequence[str] = ADMISSION_TIERS) -> None:
+        self.pool = pool
+        self.tiers = tuple(tiers)
+        self.blocked = 0
+
+    def try_admit(self, state: RequestState, nbytes: int,
+                  covers: Optional[str] = None) -> bool:
+        """``covers``: the request's page-key prefix — its parked pages are
+        charged via the reservation, not double-counted as occupancy."""
+        key = f"admit/req{state.req_id}"
+        if self.pool.reserve(key, nbytes, self.tiers, covers=covers):
+            state.reserve_key = key
+            return True
+        self.blocked += 1
+        return False
+
+    def release(self, state: RequestState) -> None:
+        if state.reserve_key:
+            self.pool.release(state.reserve_key)
+            state.reserve_key = ""
+
+    def can_ever_admit(self, nbytes: int) -> bool:
+        """Would the request fit in an *empty* pool — i.e. within the
+        tiers' raw capacities? (deadlock guard)"""
+        cap = 0
+        for t in self.tiers:
+            tier_cap = self.pool.occupancy(t)[1]
+            if tier_cap is None:
+                return True
+            cap += tier_cap
+        return nbytes <= cap
+
+
+def poisson_trace(n_requests: int, *, rate: float, vocab_size: int,
+                  prompt_lens: Sequence[int] = (4, 24),
+                  new_tokens: Sequence[int] = (2, 16),
+                  prompt_quantum: int = 1,
+                  seed: int = 0) -> List[Request]:
+    """Deterministic mixed-length Poisson arrival trace (benchmarks/tests):
+    exponential inter-arrival gaps at ``rate`` requests per unit of
+    scheduler time, uniform prompt/decode lengths in the given ranges.
+    ``prompt_quantum`` rounds prompt lengths down to bucket multiples —
+    bucketed serving keeps the set of prefill shapes (→ compiled
+    executables) small."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out: List[Request] = []
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / rate))
+        s = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        s = max(prompt_lens[0], (s // prompt_quantum) * prompt_quantum)
+        m = int(rng.integers(new_tokens[0], new_tokens[1] + 1))
+        toks = rng.integers(0, vocab_size, size=s, dtype=np.int32)
+        out.append(Request(tokens=toks, max_new_tokens=m, arrival=t, seed=i))
+    return out

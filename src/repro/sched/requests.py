@@ -1,0 +1,109 @@
+"""Request lifecycle for the continuous-batching scheduler.
+
+A ``Request`` is what a client submits: prompt tokens, a decode budget, and
+sampling parameters. ``RequestState`` is the scheduler's view of it moving
+through QUEUED → PREFILL → DECODE → DONE:
+
+- QUEUED   — waiting in the arrival queue (not yet admitted: no slot, no
+             capacity reservation);
+- PREFILL  — admitted this step: prompt being prefilled into its batch slot;
+- DECODE   — joined the running batch; one token per scheduler step;
+- DONE     — produced ``max_new_tokens``; slot freed, reservation released,
+             pages dropped.
+
+Each admitted request owns a ``KVPageTable`` (offload.kvcache): its slice
+of the stacked decode cache, page-granular, living in the memory pool when
+the scheduler runs with ``kv_offload=True``. Sampling reproduces
+``ServeEngine.generate`` per request exactly: the same seed-derived key
+stream, first token from the prefill logits, one split per decode step —
+so at ``temperature=0`` (and for any temperature, against a batch-1
+engine run with the same seed) continuous batching is token-identical to
+serving each request alone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.offload.kvcache import KVPageTable
+
+QUEUED = "QUEUED"
+PREFILL = "PREFILL"
+DECODE = "DECODE"
+DONE = "DONE"
+
+_REQUEST_IDS = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One client request: prompt ids (1-D), decode budget, sampling."""
+
+    tokens: np.ndarray                 # (S,) int32 prompt ids
+    max_new_tokens: int
+    arrival: float = 0.0               # scheduler-clock arrival time
+    temperature: float = 0.0
+    top_k: Optional[int] = None
+    seed: int = 0
+    req_id: int = dataclasses.field(default_factory=lambda: next(_REQUEST_IDS))
+
+    def __post_init__(self) -> None:
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        if self.tokens.size == 0:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def total_len(self) -> int:
+        """Worst-case sequence length (prompt + all generated tokens)."""
+        return self.prompt_len + self.max_new_tokens
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Scheduler-side mutable state of one request."""
+
+    request: Request
+    status: str = QUEUED
+    slot: Optional[int] = None         # batch row while admitted
+    pos: int = 0                       # next cache write index for decode
+    last_tok: int = -1                 # token fed to the next decode step
+    out: List[int] = dataclasses.field(default_factory=list)
+    key: Optional[jax.Array] = None    # per-request sampling key stream
+    pages: Optional[KVPageTable] = None
+    reserve_key: str = ""              # pool reservation handle
+    last_step: int = -1                # last scheduler step that decoded us
+    joined_step: int = -1
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def req_id(self) -> int:
+        return self.request.req_id
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.request.max_new_tokens
+
+    def sample_key(self) -> jax.Array:
+        """Next sampling key, mirroring ``ServeEngine.generate``: the raw
+        seed key samples the first (prefill) token; every decode step
+        splits once and samples with the subkey."""
+        if self.key is None:
+            self.key = jax.random.key(self.request.seed)
+            return self.key
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def tokens_array(self) -> np.ndarray:
+        return np.asarray(self.out, np.int32)

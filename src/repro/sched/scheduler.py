@@ -1,0 +1,352 @@
+"""Request-level continuous-batching scheduler with plan-driven KV prefetch.
+
+The step loop joins and retires sequences **every decode step** (continuous
+batching): a fixed pool of ``max_batch`` cache slots holds the running
+requests; each step the scheduler
+
+1. retires the handles of the previous step's plan-driven page fetches
+   (``kv_offload`` mode) and reassembles the stacked decode cache;
+2. admits queued requests — at most ``prefill_budget`` per step, so prompt
+   prefill interleaves with decode instead of stalling it — if a slot is
+   free AND the pool's device+host tiers can hold the request's worst-case
+   pages (``AdmissionController``); admitted prompts are prefilled
+   (batch-1) and scattered into their slot, and their first token sampled
+   from the prefill logits exactly as ``ServeEngine.generate`` does;
+3. decodes all running requests in ONE batched ``decode_step`` with
+   per-row positions (rows are independent, so each row's tokens equal the
+   per-request run), samples per request from its own seed-derived key
+   stream, and retires requests that hit their budget — freeing slots for
+   step 2 of the next iteration;
+4. in ``kv_offload`` mode, parks every running request's pages back into
+   the pool (stable per-page keys, priority = remaining decode budget — the
+   pool's priority+LRU manager spills *cold* sequences' pages, those
+   closest to retirement, to the host tier under device-tier pressure) and
+   immediately issues the next step's fetches along the planner's refined
+   order (``PlanPrefetcher``) — ahead of their consumers, with the next
+   step's admission and prefill work between issue and wait, replacing the
+   reactive store-then-immediately-wait round trip.
+
+Time is a virtual clock (1.0 per step) so arrival traces and latency
+measurements are deterministic; wall-clock throughput is the caller's to
+measure around ``run``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import HardwareSpec, TPU_V5E
+from repro.models.model import Model
+from repro.offload.kvcache import KVPageTable, worst_case_page_bytes
+from repro.pool import (
+    DEVICE_TIER, MemoryPoolManager, TransferEngine, default_pool,
+)
+from repro.pool.manager import PoolEntry
+from repro.sched.prefetch import InFlightFetches, PlanPrefetcher
+from repro.sched.queue import AdmissionController, ArrivalQueue
+from repro.sched.requests import DECODE, DONE, PREFILL, Request, RequestState
+from repro.serving.engine import jit_decode, jit_prefill
+from repro.serving.sampling import sample_token
+
+_SCHED_IDS = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_batch: int = 4            # cache slots (concurrent requests)
+    max_seq: int = 128            # per-slot cache capacity
+    prefill_budget: int = 1       # prompts prefilled (joined) per step
+    kv_offload: bool = False      # pages live in the pool between steps
+    cache_dtype: Any = jnp.float32
+    hw: HardwareSpec = TPU_V5E    # cost model driving the prefetch plan
+
+
+@dataclasses.dataclass
+class SchedStats:
+    steps: int = 0
+    joins: int = 0
+    retires: int = 0
+    prefill_tokens: int = 0
+    decoded_tokens: int = 0
+    pages_parked: int = 0
+    cold_spills: int = 0          # our pages spilled down-tier by the manager
+
+
+class ContinuousScheduler:
+    def __init__(self, model: Model, params: Any,
+                 cfg: SchedulerConfig = SchedulerConfig(), *,
+                 pool: Optional[MemoryPoolManager] = None) -> None:
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._ns = f"sched{next(_SCHED_IDS)}"
+        self.stats = SchedStats()
+        self.finished: Dict[int, RequestState] = {}
+
+        self._prefill = jit_prefill(model)
+        self._decode = jit_decode(model)
+        self.cache = model.init_cache(cfg.max_batch, cfg.max_seq,
+                                      cfg.cache_dtype)
+        self.slots: List[Optional[RequestState]] = [None] * cfg.max_batch
+        # flat layer index -> (segment, repeat, pattern position); matches
+        # cfg.layer_specs() and the decode-graph layer numbering
+        self._flat: List[Tuple[int, int, int]] = [
+            (si, ri, pi)
+            for si, seg in enumerate(model.cfg.segments)
+            for ri in range(seg.repeats)
+            for pi in range(len(seg.pattern))
+        ]
+        self._owns_pool = pool is None
+        if pool is None:
+            # transfer depth covers one full step's page fetches so the
+            # whole plan issues before anything waits
+            pages = cfg.max_batch * sum(
+                len(jax.tree.leaves(self.cache["segments"][si][f"p{pi}"]))
+                for si, _, pi in self._flat)
+            pool = default_pool(transfer=TransferEngine(depth=max(8, 2 * pages)))
+        self.pool = pool
+        self.queue = ArrivalQueue()
+        self.admission = AdmissionController(self.pool)
+        self._row_bytes = worst_case_page_bytes(
+            model.cache_specs(1, cfg.max_seq, cfg.cache_dtype))
+        self.prefetcher: Optional[PlanPrefetcher] = None
+        self._inflight: Optional[InFlightFetches] = None
+        self._fetch_map: Dict[str, Tuple[int, int, int, int, int]] = {}
+        if cfg.kv_offload:
+            self.prefetcher = PlanPrefetcher(
+                model.cfg, cfg.max_batch, cfg.max_seq, pool=self.pool,
+                hw=cfg.hw)
+            self.pool.add_evict_listener(self._on_evict)
+        self.now = 0.0
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    def submit(self, request: Request) -> RequestState:
+        if request.total_len > self.cfg.max_seq:
+            raise ValueError(
+                f"request {request.req_id}: prompt+decode "
+                f"{request.total_len} exceeds max_seq {self.cfg.max_seq}")
+        return self.queue.push(request)
+
+    @property
+    def active(self) -> List[RequestState]:
+        return [s for s in self.slots if s is not None]
+
+    def close(self) -> None:
+        """Idempotent shutdown: drop remaining pages, unhook from a shared
+        pool, close an owned pool."""
+        if self._closed:
+            return
+        self._closed = True
+        if self.cfg.kv_offload:
+            self.pool.remove_evict_listener(self._on_evict)
+        for st in list(self.slots) + list(self.finished.values()):
+            if st is not None and st.pages is not None:
+                st.pages.drop()
+            if st is not None:
+                self.admission.release(st)
+        if self._owns_pool:
+            self.pool.close()
+
+    def pool_stats(self) -> Dict[str, Any]:
+        return self.pool.snapshot()
+
+    def prefetch_stats(self) -> Optional[Dict[str, float]]:
+        return None if self.prefetcher is None else \
+            self.prefetcher.stats.snapshot()
+
+    # -- step phases ---------------------------------------------------
+    def _on_evict(self, entry: PoolEntry, dst: str) -> None:
+        if entry.key.startswith(self._ns + "/"):
+            self.stats.cold_spills += 1
+
+    def _subtree(self, si: int, pi: int):
+        return self.cache["segments"][si][f"p{pi}"]
+
+    def _collect_inflight(self) -> None:
+        """Wait (in the plan's consumption order) on the fetches issued at
+        the end of the previous step and scatter the pages back into the
+        stacked cache."""
+        fetched = self._inflight.wait_all()
+        self._inflight = None
+        updates: Dict[Tuple[int, int], List[Tuple[int, int, int, jax.Array]]] = {}
+        for key, arr in fetched.items():
+            si, pi, j, ri, slot = self._fetch_map[key]
+            updates.setdefault((si, pi), []).append((j, ri, slot, arr))
+        self._fetch_map = {}
+        for (si, pi), ups in updates.items():
+            leaves, treedef = jax.tree.flatten(self._subtree(si, pi))
+            for j, ri, slot, arr in ups:
+                leaves[j] = leaves[j].at[ri, slot].set(arr)
+            self.cache["segments"][si][f"p{pi}"] = jax.tree.unflatten(
+                treedef, leaves)
+
+    def _admit_and_prefill(self) -> List[Tuple[int, int]]:
+        emitted: List[Tuple[int, int]] = []
+        for _ in range(self.cfg.prefill_budget):
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            if not free:
+                break
+            state = self.queue.head_ready(self.now)
+            if state is None:
+                break
+            # the request's page-key prefix ("-" guards req3 vs req30)
+            covers = f"{self._ns}/req{state.req_id}-"
+            if not self.admission.try_admit(state, self._row_bytes, covers):
+                if not self.active and not self.admission.can_ever_admit(
+                        self._row_bytes):
+                    raise RuntimeError(
+                        f"request {state.req_id} can never be admitted: "
+                        f"worst-case pages ({self._row_bytes} B) exceed the "
+                        "pool's device+host capacity")
+                break   # capacity pressure — retirements will free it
+            self.queue.pop()
+            emitted.append(self._join(state, free[0]))
+        return emitted
+
+    def _join(self, state: RequestState, slot: int) -> Tuple[int, int]:
+        req = state.request
+        state.status = PREFILL
+        state.slot = slot
+        self.slots[slot] = state
+        state.joined_step = self.stats.steps
+        if self.cfg.kv_offload:   # resident mode never parks a page
+            state.pages = KVPageTable(self.pool, f"{self._ns}/req{req.req_id}")
+        row = self.model.init_cache(1, self.cfg.max_seq, self.cfg.cache_dtype)
+        logits, row = self._prefill(
+            self.params, {"tokens": jnp.asarray(req.tokens[None, :])}, row)
+        self.stats.prefill_tokens += req.prompt_len
+        # scatter the prefilled row into the batch slot
+        self.cache = jax.tree.map(lambda big, r: big.at[:, slot].set(r[:, 0]),
+                                  self.cache, row)
+        key = state.sample_key() if req.temperature > 0.0 else None
+        tok = int(sample_token(logits[:, 0], key,
+                               temperature=req.temperature,
+                               top_k=req.top_k)[0])
+        state.out.append(tok)
+        state.last_tok = tok
+        state.pos = req.prompt_len    # next decode writes here
+        state.t_first_token = self.now
+        state.status = DECODE
+        state.last_step = self.stats.steps
+        self.stats.joins += 1
+        if state.done:                # max_new_tokens == 1
+            self._retire(state)
+        return (req.req_id, tok)
+
+    def _decode_active(self) -> List[Tuple[int, int]]:
+        live = [s for s in self.slots if s is not None and s.status == DECODE]
+        if not live:
+            return []
+        b = self.cfg.max_batch
+        tok = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        for s in live:
+            tok[s.slot, 0] = s.last_tok
+            pos[s.slot] = s.pos
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tok), jnp.asarray(pos))
+        emitted: List[Tuple[int, int]] = []
+        greedy = None   # one batched argmax serves every temperature-0 row
+        for s in live:
+            req = s.request
+            if req.temperature <= 0.0:
+                if greedy is None:
+                    greedy = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+                t = int(greedy[s.slot])
+            else:
+                t = int(sample_token(logits[s.slot:s.slot + 1, 0],
+                                     s.sample_key(),
+                                     temperature=req.temperature,
+                                     top_k=req.top_k)[0])
+            s.out.append(t)
+            s.last_tok = t
+            s.pos += 1
+            s.last_step = self.stats.steps
+            self.stats.decoded_tokens += 1
+            emitted.append((req.req_id, t))
+            if s.done:
+                self._retire(s)
+        return emitted
+
+    def _retire(self, state: RequestState) -> None:
+        state.status = DONE
+        state.t_done = self.now
+        if state.pages is not None:
+            state.pages.drop()
+        self.admission.release(state)
+        self.slots[state.slot] = None
+        state.slot = None
+        self.finished[state.req_id] = state
+        self.stats.retires += 1
+
+    def _park_and_issue(self) -> None:
+        """kv_offload epilogue: park every running request's pages (stable
+        keys), then issue the next step's fetches along the plan.
+
+        Page priority = the request's remaining decode budget: every
+        device-resident page saves one host fetch per remaining step, so
+        the manager's priority+LRU eviction spills the *coldest* sequences
+        — those with the least future work, closest to retirement — first
+        under device-tier pressure."""
+        live = [s for s in self.slots if s is not None and s.status == DECODE]
+        keys_by_layer: Dict[int, List[str]] = {}
+        self._fetch_map = {}
+        for s in live:
+            prio = float(s.request.max_new_tokens - len(s.out))
+            for i, (si, ri, pi) in enumerate(self._flat):
+                leaves = jax.tree.leaves(self._subtree(si, pi))
+                for j, leaf in enumerate(leaves):
+                    key = s.pages.park(f"L{i}.{j}", leaf[ri, s.slot],
+                                       DEVICE_TIER, priority=prio)
+                    keys_by_layer.setdefault(i, []).append(key)
+                    self._fetch_map[key] = (si, pi, j, ri, s.slot)
+                    self.stats.pages_parked += 1
+        if keys_by_layer:
+            self._inflight = self.prefetcher.issue(keys_by_layer)
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Tuple[int, int]]:
+        """One scheduler step. Returns the (req_id, token) pairs emitted.
+
+        Admission + prefill run *before* the in-flight fetches are waited
+        on: that host/prefill work sits between the previous step's issue
+        and this step's wait, so the transfers it overlaps are real. A
+        newly admitted slot was free when the fetches were issued, so the
+        joiner's freshly scattered rows are never clobbered by collect."""
+        emitted = self._admit_and_prefill()
+        if self._inflight is not None:
+            self._collect_inflight()
+        emitted += self._decode_active()
+        if self.cfg.kv_offload:
+            self._park_and_issue()
+        self.stats.steps += 1
+        self.now += 1.0
+        return emitted
+
+    def run(self, requests: Sequence[Request] = (), *,
+            max_steps: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """Drive the loop until every submitted request completes. Returns
+        req_id -> generated token ids."""
+        for r in requests:
+            self.submit(r)
+        if max_steps is None:
+            max_steps = 16 + 2 * sum(
+                s.request.max_new_tokens + 1
+                for s in list(self.queue._q) + self.active)
+        steps = 0
+        while len(self.queue) or self.active:
+            if not self.active and self.queue.head_ready(self.now) is None:
+                self.now = max(self.now, self.queue.next_arrival())  # idle skip
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("scheduler made no progress "
+                                   f"({steps} steps, {len(self.queue)} queued)")
+        return {rid: st.tokens_array() for rid, st in self.finished.items()}

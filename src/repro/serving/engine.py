@@ -19,6 +19,7 @@ batching; ragged prompts are padded upstream by the caller).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 from typing import Any, Dict, Optional
 
@@ -41,6 +42,21 @@ class ServeStats:
 _ENGINE_IDS = itertools.count()
 
 
+# Jitted model entry points are shared across engine/scheduler instances
+# (keyed by the hashable frozen Model): a second engine over the same model
+# reuses the first one's compiled executables instead of re-tracing. The
+# cache is bounded so a process sweeping many model variants doesn't pin
+# every dead model's executables forever.
+@functools.lru_cache(maxsize=64)
+def jit_prefill(model: Model):
+    return jax.jit(model.prefill)
+
+
+@functools.lru_cache(maxsize=64)
+def jit_decode(model: Model):
+    return jax.jit(model.decode_step, donate_argnums=(1,))
+
+
 class ServeEngine:
     def __init__(self, model: Model, params: Any, *, max_seq: int,
                  cache_dtype=jnp.float32, offload_kv: bool = False,
@@ -58,9 +74,11 @@ class ServeEngine:
             default_pool(transfer=TransferEngine(depth=depth))
             if offload_kv else None)
         self._key_ns = f"serve{next(_ENGINE_IDS)}"
+        self._kv_keys: list = []     # stable per-leaf pool keys, grown on demand
+        self._closed = False
         self.stats = ServeStats()
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._prefill = jit_prefill(model)
+        self._decode = jit_decode(model)
 
     def pool_stats(self) -> Optional[Dict[str, Any]]:
         """Pool traffic/occupancy snapshot (None when serving resident)."""
@@ -68,7 +86,11 @@ class ServeEngine:
 
     def close(self) -> None:
         """Shut down the pool's transfer workers, if this engine owns the
-        pool (a caller-provided pool is the caller's to close)."""
+        pool (a caller-provided pool is the caller's to close). Idempotent —
+        safe to call from both user code and a finalizer."""
+        if self._closed:
+            return
+        self._closed = True
         if self._owns_pool:
             self.pool.close()
 
@@ -76,17 +98,26 @@ class ServeEngine:
     def _cache_round_trip(self, cache: Any) -> Any:
         """Store every cache leaf into the pool, then prefetch them all
         back through the transfer engine (fetches issue before any wait).
-        Entries are dropped once fetched — the host copy is transient."""
+        Leaf keys are stable across steps — a re-``put`` replaces the old
+        entry in place, so the decode loop causes zero key churn (no
+        put/drop pairs, no LRU-clock noise from dropped entries)."""
         leaves, treedef = jax.tree.flatten(cache)
-        keys = [f"{self._key_ns}/kv{i}" for i in range(len(leaves))]
+        while len(self._kv_keys) < len(leaves):
+            self._kv_keys.append(f"{self._key_ns}/kv{len(self._kv_keys)}")
+        keys = self._kv_keys[:len(leaves)]
         for k, leaf in zip(keys, leaves):
             self.pool.put(k, leaf, HOST_TIER)
         handles = [self.pool.prefetch(k) for k in keys]
         self.stats.cache_round_trips += 1
         fetched = [h.wait() for h in handles]
-        for k in keys:
-            self.pool.drop(k)
         return jax.tree.unflatten(treedef, fetched)
+
+    def _release_cache_keys(self) -> None:
+        """Drop the standing cache entries (end of a generate call — the
+        host copies are only meaningful while their cache is live)."""
+        for k in self._kv_keys:
+            if k in self.pool:
+                self.pool.drop(k)
 
     def generate(self, batch: Dict[str, jax.Array], max_new_tokens: int, *,
                  temperature: float = 0.0, top_k: Optional[int] = None,
@@ -104,14 +135,20 @@ class ServeEngine:
         out = []
         tok = sample_token(logits[:, 0], key, temperature=temperature, top_k=top_k)
         out.append(tok)
-        for i in range(1, max_new_tokens):
-            pos = jnp.int32(s0 + i - 1)
+        try:
+            for i in range(1, max_new_tokens):
+                pos = jnp.int32(s0 + i - 1)
+                if self.offload_kv:
+                    cache = self._cache_round_trip(cache)   # Store + Prefetch
+                key, sub = jax.random.split(key)
+                logits, cache = self._decode(self.params, cache, tok[:, None], pos)
+                tok = sample_token(logits[:, 0], sub, temperature=temperature,
+                                   top_k=top_k)
+                out.append(tok)
+                self.stats.decoded_tokens += b
+        finally:
+            # even on an interrupted decode, standing cache entries must not
+            # haunt a shared pool as phantom occupancy
             if self.offload_kv:
-                cache = self._cache_round_trip(cache)   # Store + Prefetch
-            key, sub = jax.random.split(key)
-            logits, cache = self._decode(self.params, cache, tok[:, None], pos)
-            tok = sample_token(logits[:, 0], sub, temperature=temperature,
-                               top_k=top_k)
-            out.append(tok)
-            self.stats.decoded_tokens += b
+                self._release_cache_keys()
         return jnp.stack(out, axis=1)

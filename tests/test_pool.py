@@ -113,6 +113,39 @@ def test_pinned_entries_never_evict_and_last_tier_overflows():
     assert p.tier_of("pinned") == "host"
 
 
+def test_reserve_release_and_headroom():
+    """Admission-control ledger: reservations count against the named
+    tiers' combined capacity; release returns the headroom."""
+    p = default_pool(device_capacity=1 << 20, host_capacity=1 << 20)
+    tiers = ("device", "host")
+    assert p.headroom(tiers) == 2 << 20
+    assert p.reserve("r1", 1 << 20, tiers)
+    assert p.reserve("r2", 512 << 10, tiers)
+    assert not p.reserve("r3", 1 << 20, tiers)      # would over-commit
+    assert p.reserved_bytes(tiers) == (1 << 20) + (512 << 10)
+    p.put("a", _arr(256), tier="host")              # occupancy counts too
+    assert p.headroom(tiers) == (512 << 10) - 256 * 1024
+    p.release("r1")
+    assert p.reserve("r3", 1 << 20, tiers)
+    p.release("r2")
+    p.release("r3")
+    p.release("r3")                                  # no-op re-release
+    assert p.reserved_bytes() == 0
+    assert p.snapshot()["reserved"] == 0
+    # an unbounded tier in the set always admits
+    assert p.reserve("big", 1 << 40, ("device", "host", "remote"))
+
+
+def test_evict_listener_fires_on_spill():
+    p = default_pool(host_capacity=256 * 1024)
+    seen = []
+    p.add_evict_listener(lambda entry, dst: seen.append((entry.key, dst)))
+    p.put("cold", _arr(256))
+    p.put("hot", _arr(256))                          # spills "cold" → remote
+    assert seen == [("cold", "remote")]
+    assert p.tier_of("cold") == "remote"
+
+
 def test_shared_pool_across_caches_does_not_collide():
     """The documented shared-pool-across-layers setup: page keys are
     namespaced per cache instance."""

@@ -1,0 +1,291 @@
+"""Continuous-batching scheduler: token identity vs. sequential serving
+(including mid-stream joins/retirements and host-tier eviction), admission
+control never over-committing pool capacity, and plan-driven prefetch
+issuing ahead of consumption."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import hypothesis_or_stub
+
+given, settings, st = hypothesis_or_stub()
+
+from repro.configs import REGISTRY
+from repro.models.model import build_model
+from repro.offload.kvcache import worst_case_page_bytes
+from repro.pool import DEVICE_TIER, HOST_TIER, TransferEngine, default_pool
+from repro.sched import (
+    ContinuousScheduler, Request, SchedulerConfig, poisson_trace,
+)
+from repro.serving.engine import ServeEngine
+
+CFG = REGISTRY["phi3-mini-3.8b"].reduced()
+MAX_SEQ = 32
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    m = build_model(CFG)
+    return m, m.init(jax.random.key(0))
+
+
+def _mixed_trace():
+    """Staggered arrivals + mixed lengths on a 2-slot batch: forces
+    mid-stream joins, retirements, and continuous slot reuse."""
+    rng = np.random.default_rng(0)
+    shapes = [(5, 6, 0.0), (9, 3, 0.0), (3, 8, 2.0), (7, 1, 4.0), (4, 5, 4.0)]
+    return [Request(tokens=rng.integers(0, CFG.vocab_size, size=s,
+                                        dtype=np.int32),
+                    max_new_tokens=n, arrival=a, seed=i)
+            for i, (s, n, a) in enumerate(shapes)]
+
+
+def _sequential_reference(model, params, requests, **kw):
+    eng = ServeEngine(model, params, max_seq=MAX_SEQ)
+    out = {}
+    for r in requests:
+        got = eng.generate({"tokens": jnp.asarray(r.tokens[None, :])},
+                           r.max_new_tokens, seed=r.seed, **kw)
+        out[r.req_id] = np.asarray(got)[0]
+    eng.close()
+    return out
+
+
+def test_continuous_matches_sequential_greedy(model_and_params):
+    model, params = model_and_params
+    reqs = _mixed_trace()
+    sched = ContinuousScheduler(model, params,
+                                SchedulerConfig(max_batch=2, max_seq=MAX_SEQ))
+    out = sched.run(reqs)
+    assert sched.stats.joins == len(reqs) and sched.stats.retires == len(reqs)
+    # the 2-slot batch over 5 staggered requests must have reused slots
+    assert sched.stats.steps < sum(r.max_new_tokens for r in reqs)
+    ref = _sequential_reference(model, params, reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.req_id], ref[r.req_id])
+    sched.close()
+    sched.close()   # idempotent
+
+
+def test_offload_matches_sequential_and_evicts_to_host(model_and_params):
+    """kv_offload mode under device-tier pressure: cold sequences' pages
+    spill to the host tier via the priority+LRU manager, fetches run
+    through the plan, and outputs stay token-identical."""
+    model, params = model_and_params
+    reqs = _mixed_trace()
+    row = worst_case_page_bytes(model.cache_specs(1, MAX_SEQ, jnp.float32))
+    pool = default_pool(device_capacity=int(1.5 * row),
+                        host_capacity=4 * row,
+                        transfer=TransferEngine(depth=64))
+    sched = ContinuousScheduler(
+        model, params,
+        SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, kv_offload=True),
+        pool=pool)
+    out = sched.run(reqs)
+    ref = _sequential_reference(model, params, reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.req_id], ref[r.req_id])
+    snap = sched.pool_stats()
+    assert snap["evictions"] > 0 and sched.stats.cold_spills > 0
+    assert snap["tier/remote"]["entries"] == 0       # admission held
+    sched.close()
+    pool.close()
+
+
+def test_prefetcher_issues_ahead_of_consumption(model_and_params):
+    """The plan schedules every layer's fetch before its consumer, and at
+    runtime most waits find the transfer already complete — the
+    store-then-immediately-wait round trip is gone from the decode loop."""
+    model, params = model_and_params
+    sched = ContinuousScheduler(
+        model, params,
+        SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, kv_offload=True))
+    sched.run(_mixed_trace())
+    pf = sched.prefetch_stats()
+    assert pf["fetches_issued"] > 0
+    assert pf["mean_plan_lead"] >= 1.0          # issued ahead in the plan
+    tr = sched.pool_stats()["transfer"]
+    assert tr["issued"] == pf["fetches_issued"]
+    assert tr["waits_overlapped"] > 0           # overlapped at runtime too
+    sched.close()
+
+
+def test_temperature_sampling_matches_batch1_engine(model_and_params):
+    """For temperature>0 the scheduler reproduces a batch-1 engine run's
+    key stream (first token from the raw seed key, one split per step)."""
+    model, params = model_and_params
+    rng = np.random.default_rng(3)
+    reqs = [Request(tokens=rng.integers(0, CFG.vocab_size, size=s,
+                                        dtype=np.int32),
+                    max_new_tokens=4, temperature=0.8, top_k=8, seed=i)
+            for i, s in enumerate((5, 8))]
+    sched = ContinuousScheduler(model, params,
+                                SchedulerConfig(max_batch=2, max_seq=MAX_SEQ))
+    out = sched.run(reqs)
+    ref = _sequential_reference(model, params, reqs,
+                                temperature=0.8, top_k=8)
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.req_id], ref[r.req_id])
+    sched.close()
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def _run_checking_invariants(model, params, reqs, slots, device_rows,
+                             host_rows):
+    row = worst_case_page_bytes(model.cache_specs(1, MAX_SEQ, jnp.float32))
+    pool = default_pool(device_capacity=device_rows * row,
+                        host_capacity=host_rows * row,
+                        transfer=TransferEngine(depth=64))
+    cap = device_rows * row + host_rows * row
+    sched = ContinuousScheduler(
+        model, params,
+        SchedulerConfig(max_batch=slots, max_seq=MAX_SEQ, kv_offload=True),
+        pool=pool)
+    for r in reqs:
+        sched.submit(r)
+    guard = 0
+    max_active = 0
+    while len(sched.queue) or sched.active:
+        if not sched.active and sched.queue.head_ready(sched.now) is None:
+            sched.now = sched.queue.next_arrival()
+        sched.step()
+        max_active = max(max_active, len(sched.active))
+        # over-commit invariants, checked EVERY step:
+        assert sched.pool.reserved_bytes((DEVICE_TIER, HOST_TIER)) <= cap
+        snap = sched.pool.snapshot()
+        assert snap["tier/remote"]["entries"] == 0, \
+            "pages forced into the remote tier — admission over-committed"
+        guard += 1
+        assert guard < 500
+    assert len(sched.finished) == len(reqs)
+    assert max_active <= device_rows + host_rows   # ≤ capacity in rows
+    assert sched.pool.reserved_bytes() == 0      # all released at retirement
+    sched.close()
+    pool.close()
+    return sched
+
+
+def test_admission_never_overcommits_deterministic(model_and_params):
+    model, params = model_and_params
+    blocked = 0
+    for seed in range(3):
+        # rate 5.0 clusters arrivals so a 3rd request contends while two
+        # (the whole device+host capacity) are running
+        reqs = poisson_trace(6, rate=5.0, vocab_size=CFG.vocab_size,
+                             prompt_lens=(4, 8), new_tokens=(1, 4),
+                             prompt_quantum=4, seed=seed)
+        sched = _run_checking_invariants(model, params, reqs,
+                                         slots=3, device_rows=1, host_rows=1)
+        blocked += sched.admission.blocked
+    assert blocked > 0    # 3 slots but capacity for 2 → admission gated
+
+
+@given(st.integers(0, 10_000), st.integers(2, 4), st.integers(1, 2),
+       st.integers(1, 2))
+@settings(max_examples=8, deadline=None)
+def test_admission_never_overcommits_property(seed, n_reqs, device_rows,
+                                              host_rows):
+    m = build_model(CFG)
+    params = m.init(jax.random.key(0))
+    reqs = poisson_trace(n_reqs, rate=2.0, vocab_size=CFG.vocab_size,
+                         prompt_lens=(4, 8), new_tokens=(1, 3),
+                         prompt_quantum=4, seed=seed)
+    _run_checking_invariants(m, params, reqs, slots=3,
+                             device_rows=device_rows, host_rows=host_rows)
+
+
+def test_covered_reservations_allow_full_concurrency(model_and_params):
+    """A running request's parked pages are charged via its reservation
+    (``covers``), not double-counted as occupancy: capacity for exactly two
+    worst-case rows really admits two concurrent requests."""
+    model, params = model_and_params
+    row = worst_case_page_bytes(model.cache_specs(1, MAX_SEQ, jnp.float32))
+    pool = default_pool(device_capacity=row, host_capacity=row,
+                        transfer=TransferEngine(depth=64))
+    sched = ContinuousScheduler(
+        model, params,
+        SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, prefill_budget=2,
+                        kv_offload=True),
+        pool=pool)
+    reqs = [Request(tokens=np.ones((4,), np.int32), max_new_tokens=6, seed=i)
+            for i in range(2)]
+    for r in reqs:
+        sched.submit(r)
+    for _ in range(3):
+        sched.step()
+    assert len(sched.active) == 2       # both admitted, despite parked pages
+    sched.run()
+    assert sched.pool.snapshot()["tier/remote"]["entries"] == 0
+    sched.close()
+    pool.close()
+
+
+def test_arrival_queue_orders_by_arrival_not_submission(model_and_params):
+    """A future-dated request submitted first must not shadow an
+    already-arrived later submission."""
+    model, params = model_and_params
+    late = Request(tokens=np.ones((4,), np.int32), max_new_tokens=2,
+                   arrival=50.0, seed=0)
+    early = Request(tokens=np.ones((4,), np.int32), max_new_tokens=2,
+                    arrival=0.0, seed=1)
+    sched = ContinuousScheduler(model, params,
+                                SchedulerConfig(max_batch=1, max_seq=MAX_SEQ))
+    sched.submit(late)
+    sched.submit(early)
+    sched.run()
+    assert sched.finished[early.req_id].t_done < 50.0   # served before late
+    sched.close()
+
+
+def test_oversized_request_raises(model_and_params):
+    model, params = model_and_params
+    sched = ContinuousScheduler(model, params,
+                                SchedulerConfig(max_batch=1, max_seq=MAX_SEQ))
+    with pytest.raises(ValueError, match="exceeds max_seq"):
+        sched.submit(Request(tokens=np.ones((MAX_SEQ,), np.int32),
+                             max_new_tokens=4))
+    sched.close()
+
+
+def test_unadmittable_request_raises(model_and_params):
+    """A request whose worst-case pages exceed device+host capacity must
+    fail loudly, not deadlock the queue."""
+    model, params = model_and_params
+    pool = default_pool(device_capacity=64, host_capacity=64)
+    sched = ContinuousScheduler(
+        model, params,
+        SchedulerConfig(max_batch=1, max_seq=MAX_SEQ, kv_offload=True),
+        pool=pool)
+    sched.submit(Request(tokens=np.ones((4,), np.int32), max_new_tokens=2))
+    with pytest.raises(RuntimeError, match="never be admitted"):
+        sched.step()
+    sched.close()
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# engine round-trip key churn fix
+# ---------------------------------------------------------------------------
+
+
+def test_engine_round_trip_uses_stable_keys(model_and_params):
+    model, params = model_and_params
+    eng = ServeEngine(model, params, max_seq=MAX_SEQ, offload_kv=True)
+    toks = jnp.ones((1, 4), jnp.int32)
+    eng.generate({"tokens": toks}, 5)
+    snap = eng.pool_stats()
+    n_leaves = len(jax.tree.leaves(model.init_cache(1, MAX_SEQ)))
+    # stable keys: 4 round trips re-put the same leaf entries; the only
+    # drops are the end-of-generate release (≤ one per leaf, not per step)
+    assert eng.stats.cache_round_trips == 4
+    assert snap["puts"] == 4 * n_leaves
+    assert snap["drops"] <= n_leaves
+    assert snap["tier/host"]["entries"] == 0     # released after generate
+    eng.close()
+    eng.close()   # idempotent

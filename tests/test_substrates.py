@@ -167,10 +167,20 @@ def test_plan_executor_equivalence_with_offload():
 
     plan = HyperOffloadPlanner(TPU_V5E).plan(g)
     assert any(n.kind == "prefetch" for n in plan.graph.nodes.values())
-    out = PlanExecutor(plan.graph, fns).run(inputs, plan.order)
+    # PlanExecutor is a sync wrapper over the pool executor: inject a pool
+    # and confirm the cache ops really routed through it
+    from repro.pool import default_pool
+    pool = default_pool()
+    out = PlanExecutor(plan.graph, fns, pool=pool).run(inputs, plan.order)
     ref = run_baseline(g, fns, inputs)
     np.testing.assert_allclose(np.asarray(out["h4"]), np.asarray(ref["h4"]),
                                atol=1e-6)
+    snap = pool.snapshot()
+    assert snap["puts"] >= 5 and snap["bytes_fetched"] > 0
+    assert snap["transfer"]["issued"] > 0     # prefetches went async
+    # sync contract: a run leaves nothing behind in an injected pool
+    assert snap["tier/host"]["entries"] == 0
+    pool.close()
 
 
 def test_plan_executor_rejects_missing_fn():
