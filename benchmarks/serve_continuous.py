@@ -32,14 +32,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import HyperOffloadSession, OffloadConfig
 from repro.configs import REGISTRY
 from repro.models.model import build_model
 from repro.offload.kvcache import worst_case_page_bytes
-from repro.pool import default_pool
-from repro.sched import (
-    ContinuousScheduler, Request, SchedulerConfig, poisson_trace,
-)
-from repro.serving.engine import ServeEngine
+from repro.sched import Request, poisson_trace
 
 
 def _pct(xs: List[float], q: float) -> float:
@@ -51,9 +48,9 @@ def _pct(xs: List[float], q: float) -> float:
 # ---------------------------------------------------------------------------
 
 
-def run_static(model, params, trace: List[Request], max_batch: int,
-               max_seq: int) -> Dict[str, float]:
-    engine = ServeEngine(model, params, max_seq=max_seq)
+def run_static(session, model, params, trace: List[Request],
+               max_batch: int) -> Dict[str, float]:
+    engine = session.serve_engine(model, params, offload_kv=False)
     clock = 0.0
     latencies: List[float] = []
     tokens = 0
@@ -89,14 +86,9 @@ def run_static(model, params, trace: List[Request], max_batch: int,
 # ---------------------------------------------------------------------------
 
 
-def run_continuous(model, params, trace: List[Request], max_batch: int,
-                   max_seq: int, *, kv_offload: bool = False,
-                   pool=None) -> Dict[str, float]:
-    sched = ContinuousScheduler(
-        model, params,
-        SchedulerConfig(max_batch=max_batch, max_seq=max_seq,
-                        prefill_budget=2, kv_offload=kv_offload),
-        pool=pool)
+def run_continuous(session, model, params, trace: List[Request], *,
+                   kv_offload: bool = False) -> Dict[str, float]:
+    sched = session.scheduler(model, params, kv_offload=kv_offload)
     t0 = time.perf_counter()
     out = sched.run(trace)
     wall = time.perf_counter() - t0
@@ -152,6 +144,11 @@ def main() -> None:
         prompt_lens=(lo, hi), new_tokens=(2, min(16, args.max_seq // 3)),
         prompt_quantum=quantum, seed=seed)
 
+    # one resident session serves the static + continuous baselines
+    resident = HyperOffloadSession(OffloadConfig(
+        mode="continuous", max_batch=args.max_batch, max_seq=args.max_seq,
+        prefill_budget=2))
+
     # warm every prefill bucket + both decode shapes outside the timed
     # region (jitted entry points are shared across engine/scheduler
     # instances, so these compiles serve the measured runs)
@@ -159,33 +156,40 @@ def main() -> None:
                     seed=1000 + s)
             for s in range(lo, hi + 1, quantum)]
     for r in warm:   # one batch per bucket → every (max_batch, s) prefill
-        run_static(model, params, [r], args.max_batch, args.max_seq)
-    run_continuous(model, params, warm, args.max_batch, args.max_seq)
+        run_static(resident, model, params, [r], args.max_batch)
+    run_continuous(resident, model, params, warm)
 
     trace = mk(args.seed)
-    static = run_static(model, params, trace, args.max_batch, args.max_seq)
-    cont = run_continuous(model, params, trace, args.max_batch, args.max_seq)
+    static = run_static(resident, model, params, trace, args.max_batch)
+    cont = run_continuous(resident, model, params, trace)
 
     # plan-driven prefetch demo: device tier sized to ~half the running
     # batch, so cold sequences' pages spill to host and get fetched back
     # along the planner's refined order
     off_trace = mk(args.seed + 2)[:max(4, args.requests // 2)]
     row = worst_case_page_bytes(model.cache_specs(1, args.max_seq, jnp.float32))
-    pool = default_pool(device_capacity=max(1, args.max_batch // 2) * row,
-                        host_capacity=2 * args.max_batch * row)
-    offload = run_continuous(model, params, off_trace, args.max_batch,
-                             args.max_seq, kv_offload=True, pool=pool)
-    pool.close()   # injected pool is ours to close
+    off_session = HyperOffloadSession(OffloadConfig(
+        mode="kv_offload", max_batch=args.max_batch, max_seq=args.max_seq,
+        prefill_budget=2,
+        device_capacity=max(1, args.max_batch // 2) * row,
+        host_capacity=2 * args.max_batch * row))
+    offload = run_continuous(off_session, model, params, off_trace,
+                             kv_offload=True)
 
     speedup = cont["tokens_per_s"] / static["tokens_per_s"]
     summary = {
         "arch": cfg.name, "requests": args.requests, "rate": args.rate,
         "max_batch": args.max_batch, "max_seq": args.max_seq,
         "static": static, "continuous": cont, "kv_offload": offload,
+        # the merged front-door snapshot: pool/transfer counters next to
+        # the throughput numbers (tracked in BENCH_serving.json)
+        "session": off_session.stats(),
         "throughput_speedup": speedup,
         "step_throughput_speedup":
             cont["tokens_per_step"] / static["tokens_per_step"],
     }
+    off_session.close()
+    resident.close()
     for mode, r in (("static", static), ("continuous", cont),
                     ("kv_offload", offload)):
         print(f"serve_continuous,{mode},tok/s:{r['tokens_per_s']:.1f},"

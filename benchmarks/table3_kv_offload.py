@@ -97,18 +97,19 @@ def runtime_pool_stats() -> Dict:
     rows above (absolute sizes are toy; the ratios are the point)."""
     import jax
 
-    from repro.offload.kvcache import PagedKVCache
+    from repro.api import HyperOffloadSession, OffloadConfig
 
     b, hkv, d, page, ctx = 2, 4, 64, 32, 512
-    cache = PagedKVCache.create(batch=b, max_seq=ctx + page, page_size=page,
-                                n_kv_heads=hkv, head_dim=d)
-    ks = jax.random.split(jax.random.key(0), 3)
-    cache.prefill(jax.random.normal(ks[0], (b, ctx, hkv, d)),
-                  jax.random.normal(ks[1], (b, ctx, hkv, d)))
-    q = jax.random.normal(ks[2], (b, 8, d))
-    for top_k in (None, 4, 2):          # dense + two sparse settings
-        cache.attend(q, scale=d ** -0.5, top_k_pages=top_k)
-    return cache.pool_stats()
+    with HyperOffloadSession(OffloadConfig(mode="paged", max_seq=ctx + page,
+                                           page_size=page)) as session:
+        cache = session.paged_kv(batch=b, n_kv_heads=hkv, head_dim=d)
+        ks = jax.random.split(jax.random.key(0), 3)
+        cache.prefill(jax.random.normal(ks[0], (b, ctx, hkv, d)),
+                      jax.random.normal(ks[1], (b, ctx, hkv, d)))
+        q = jax.random.normal(ks[2], (b, 8, d))
+        for top_k in (None, 4, 2):          # dense + two sparse settings
+            cache.attend(q, scale=d ** -0.5, top_k_pages=top_k)
+        return cache.pool_stats()
 
 
 def main():

@@ -1,13 +1,17 @@
-"""Quickstart: train a small model with HyperOffload memory management,
-then generate from it.
+"""Quickstart: one `OffloadConfig`, one `HyperOffloadSession`, every
+offload mechanism behind them.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Demonstrates the three offload mechanisms end to end on CPU:
-- activation offload (offload-aware remat policy),
-- optimizer-state host offload,
-- KV-cache host round trips during generation —
-all numerically identical to the resident baselines.
+The session is the single front door: it owns the memory pool, the async
+transfer engine, and the planner, and hands out training steps and serving
+engines pre-wired to them. Demonstrated end to end on CPU:
+
+- activation offload (offload-aware remat policy) + optimizer-state host
+  offload, both switched by config fields (``remat``, ``offload_opt_state``);
+- KV-cache host round trips during generation (``mode="kv_offload"``) —
+  numerically identical to the resident baseline;
+- the merged ``session.stats()`` snapshot (pool + transfer + serve).
 """
 
 import time
@@ -15,11 +19,10 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import HyperOffloadSession, OffloadConfig
 from repro.configs import get_config
 from repro.data.pipeline import SyntheticTokens
 from repro.models.model import build_model
-from repro.serving.engine import ServeEngine
-from repro.training.step import TrainStepConfig, init_train_state, make_train_step
 
 
 def main():
@@ -27,11 +30,16 @@ def main():
     model = build_model(cfg)
     print(f"model: {cfg.name} ({cfg.n_layers} layers, d_model {cfg.d_model})")
 
-    ts = TrainStepConfig(remat="offload", offload_opt_state=True,
-                         peak_lr=2e-3, warmup=5, total_steps=60)
-    params, opt_state = init_train_state(model, jax.random.key(0), ts=ts)
-    step = make_train_step(model, ts)
-    data = SyntheticTokens(cfg.vocab_size, seq_len=32, global_batch=8, noise=0.05)
+    # one declarative config: serving mode + training memory policy
+    config = OffloadConfig(mode="kv_offload", max_seq=48,
+                           remat="offload", offload_opt_state=True)
+    session = HyperOffloadSession(config)
+
+    step = session.train_step(model, peak_lr=2e-3, warmup=5, total_steps=60)
+    params, opt_state = session.init_train_state(
+        model, jax.random.key(0), peak_lr=2e-3, warmup=5, total_steps=60)
+    data = SyntheticTokens(cfg.vocab_size, seq_len=32, global_batch=8,
+                           noise=0.05)
 
     print("training with activation + optimizer-state offload...")
     t0 = time.time()
@@ -45,14 +53,21 @@ def main():
 
     print("generating (resident cache vs host-offloaded cache)...")
     prompt = {"tokens": data.batch(0)["tokens"][:, :16]}
-    resident = ServeEngine(model, params, max_seq=48)
-    offloaded = ServeEngine(model, params, max_seq=48, offload_kv=True)
+    resident = session.serve_engine(model, params, offload_kv=False)
+    offloaded = session.serve_engine(model, params)   # mode = kv_offload
     out_r = resident.generate(prompt, 16)
     out_o = offloaded.generate(prompt, 16)
     assert bool(jnp.all(out_r == out_o)), "offload changed results!"
     print(f"  identical generations; cache round trips: "
           f"{offloaded.stats.cache_round_trips}")
     print("  sample:", out_r[0].tolist())
+
+    s = session.stats()
+    print(f"session stats: serve={s['serve']} "
+          f"pool: {s['pool']['puts']} puts / {s['pool']['gets']} gets, "
+          f"{s['pool']['transfer']['issued']} async fetches "
+          f"({s['pool']['transfer']['waits_overlapped']} overlapped)")
+    session.close()
 
 
 if __name__ == "__main__":

@@ -22,7 +22,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.offload.kvcache import PagedKVCache
+from repro.api import HyperOffloadSession, OffloadConfig
 from repro.kernels.ref import decode_attention_ref
 
 
@@ -32,8 +32,14 @@ def main():
     scale = d ** -0.5
     ks = jax.random.split(jax.random.key(0), 4)
 
-    cache = PagedKVCache.create(batch=b, max_seq=ctx + 64, page_size=page,
-                                n_kv_heads=hkv, head_dim=d)
+    n_pages = -(-(ctx + 64) // page)
+    page_nbytes = b * page * hkv * d * 4
+    # host tier sized to exactly hold every K and V page (overflow would
+    # spill to the remote tier) — tier topology is config, not a call site
+    session = HyperOffloadSession(OffloadConfig(
+        mode="paged", max_seq=ctx + 64, page_size=page,
+        host_capacity=2 * n_pages * page_nbytes))
+    cache = session.paged_kv(batch=b, n_kv_heads=hkv, head_dim=d)
     k_ctx = jax.random.normal(ks[0], (b, ctx, hkv, d))
     v_ctx = jax.random.normal(ks[1], (b, ctx, hkv, d))
     cache.prefill(k_ctx, v_ctx)
@@ -86,6 +92,7 @@ def main():
     print(f"transfer engine: {xfer['issued']} async fetches issued, "
           f"{xfer['waits_overlapped']} fully overlapped, "
           f"{xfer['waits_blocked']} blocked ({xfer['blocked_s'] * 1e3:.1f} ms exposed)")
+    session.close()
 
 
 def main_continuous():
@@ -93,8 +100,7 @@ def main_continuous():
     from repro.configs import REGISTRY
     from repro.models.model import build_model
     from repro.offload.kvcache import worst_case_page_bytes
-    from repro.pool import TransferEngine, default_pool
-    from repro.sched import ContinuousScheduler, SchedulerConfig, poisson_trace
+    from repro.sched import poisson_trace
 
     cfg = REGISTRY["phi3-mini-3.8b"].reduced()
     model = build_model(cfg)
@@ -102,14 +108,12 @@ def main_continuous():
     max_batch, max_seq = 3, 48
     row = worst_case_page_bytes(model.cache_specs(1, max_seq, jnp.float32))
     # device tier ≈ 1.5 cache rows: cold sequences' pages spill to host
-    pool = default_pool(device_capacity=int(1.5 * row),
-                        host_capacity=2 * max_batch * row,
-                        transfer=TransferEngine(depth=64))
-    sched = ContinuousScheduler(
-        model, params,
-        SchedulerConfig(max_batch=max_batch, max_seq=max_seq,
-                        prefill_budget=2, kv_offload=True),
-        pool=pool)
+    session = HyperOffloadSession(OffloadConfig(
+        mode="kv_offload", max_batch=max_batch, max_seq=max_seq,
+        prefill_budget=2,
+        device_capacity=int(1.5 * row),
+        host_capacity=2 * max_batch * row))
+    sched = session.scheduler(model, params)
     trace = poisson_trace(10, rate=0.8, vocab_size=cfg.vocab_size,
                           prompt_lens=(4, 16), new_tokens=(2, 12),
                           prompt_quantum=4, seed=0)
@@ -131,8 +135,7 @@ def main_continuous():
           f"waits overlapped / {xfer['waits_blocked']} blocked")
     lat = sorted(s.t_done - s.request.arrival for s in sched.finished.values())
     print(f"latency (steps): p50 {lat[len(lat) // 2]:.1f}, max {lat[-1]:.1f}")
-    sched.close()
-    pool.close()   # injected pool is ours to close
+    session.close()   # closes the scheduler and the session-owned pool
 
 
 if __name__ == "__main__":

@@ -15,12 +15,12 @@ import time
 
 import jax
 
+from repro.api import HyperOffloadSession, OffloadConfig
 from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
 from repro.configs import get_config
 from repro.configs.base import LayerSpec, Segment
 from repro.data.pipeline import SyntheticTokens
 from repro.models.model import build_model
-from repro.training.step import TrainStepConfig, init_train_state, make_train_step
 
 
 def make_100m_config():
@@ -49,15 +49,16 @@ def main():
 
     cfg = make_100m_config()
     model = build_model(cfg)
-    ts = TrainStepConfig(remat="offload", offload_opt_state=False,
-                         peak_lr=6e-4, warmup=args.steps // 10,
-                         total_steps=args.steps)
-    params, opt_state = init_train_state(model, jax.random.key(0), ts=ts)
+    session = HyperOffloadSession(OffloadConfig(remat="offload"))
+    ts = session.train_config(peak_lr=6e-4, warmup=args.steps // 10,
+                              total_steps=args.steps)
+    params, opt_state = session.init_train_state(model, jax.random.key(0),
+                                                 ts=ts)
     n = sum(x.size for x in jax.tree.leaves(params))
     print(f"{cfg.name}: {n / 1e6:.1f}M params, {args.steps} steps @ "
           f"batch {args.batch} × seq {args.seq_len}")
 
-    step = make_train_step(model, ts)
+    step = session.train_step(model, ts)
     data = SyntheticTokens(cfg.vocab_size, seq_len=args.seq_len,
                            global_batch=args.batch, noise=0.05)
     os.makedirs(args.ckpt_dir, exist_ok=True)
@@ -80,6 +81,7 @@ def main():
     restored, at = load_checkpoint(os.path.join(args.ckpt_dir, "latest.npz"),
                                    params)
     print(f"checkpoint resume verified at step {at}")
+    session.close()
 
 
 if __name__ == "__main__":

@@ -10,6 +10,15 @@ fi
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 
+# public-API smoke: the quickstart exercises the OffloadConfig /
+# HyperOffloadSession front door end to end (train + serve + stats)
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python examples/quickstart.py
+
+# default-config dump: any drift in the public config surface (new field,
+# changed default) shows up as a CONFIG_default.json diff in review
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.api --print-config > CONFIG_default.json
+
 # serving perf smoke: continuous vs static batching on a mixed-length
 # Poisson trace; summary accumulates in BENCH_serving.json
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

@@ -1,0 +1,36 @@
+"""`repro.api` — the public front door.
+
+One declarative `OffloadConfig` (tier topology, hardware, planner options,
+transfer-depth policy, mode) and one `HyperOffloadSession` facade that owns
+the pool / transfer engine / planner and constructs every subsystem
+pre-wired to them. See `api.config` and `api.session` module docs; dump the
+default config with ``python -m repro.api --print-config``.
+
+Migration from the old per-subsystem constructors:
+
+=====================================  =====================================
+old call site                          through the front door
+=====================================  =====================================
+``ServeEngine(m, p, offload_kv=True)`` ``OffloadConfig(mode="kv_offload")``;
+                                       ``session.serve_engine(m, p)``
+``ContinuousScheduler(m, p,            ``session.scheduler(m, p)`` (fields
+SchedulerConfig(...), pool=pool)``     from the config, kwargs override)
+``PagedKVCache.create(..., pool=...)`` ``session.paged_kv(batch=..., ...)``
+``PlanExecutor(g, fns, pool=...)``     ``session.executor(g, fns)``
+``make_train_step(m, TrainStepConfig(  ``session.train_step(m,
+remat=..., offload_opt_state=...))``   total_steps=...)``
+``TransferEngine(depth=<magic>)``      ``transfer_depth="auto"`` (policy:
+                                       ``pool.auto_depth``)
+``InsertionOptions(min_bytes=1)``      mode default (``insertion=None``)
+=====================================  =====================================
+"""
+
+from repro.api.config import HW_SPECS, MODES, OffloadConfig
+from repro.api.session import HyperOffloadSession
+
+__all__ = [
+    "OffloadConfig",
+    "HyperOffloadSession",
+    "HW_SPECS",
+    "MODES",
+]

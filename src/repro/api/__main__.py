@@ -1,0 +1,39 @@
+"""Config introspection CLI.
+
+    PYTHONPATH=src python -m repro.api --print-config [--mode MODE]
+
+Dumps the (default) `OffloadConfig` as sorted JSON. `scripts/ci.sh` writes
+it to ``CONFIG_default.json`` so any drift in the public config surface —
+a new field, a changed default — shows up in review diffs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.api.config import MODES, OffloadConfig
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.api",
+        description="HyperOffload public-API introspection")
+    ap.add_argument("--print-config", action="store_true",
+                    help="dump the default OffloadConfig as JSON")
+    ap.add_argument("--mode", choices=MODES, default=None,
+                    help="dump the defaults for this mode instead")
+    args = ap.parse_args(argv)
+    if not args.print_config:
+        ap.print_help()
+        return 2
+    cfg = OffloadConfig() if args.mode is None else OffloadConfig(mode=args.mode)
+    d = cfg.to_dict()
+    # the effective (mode-resolved) planner default is part of the surface
+    d["insertion_resolved"] = cfg.insertion_options().__dict__
+    print(json.dumps(d, indent=2, sort_keys=True, default=str))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

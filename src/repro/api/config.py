@@ -1,0 +1,179 @@
+"""`OffloadConfig` — the one declarative description of an offload setup.
+
+Before the `repro.api` front door, tier topology, planner options, and
+transfer depths were scattered across five constructors with ad-hoc kwargs
+and magic numbers. `OffloadConfig` owns all of it in a single frozen,
+serializable object:
+
+- **mode** — what the session is serving: ``resident`` (KV stays on
+  device), ``kv_offload`` (whole-cache / per-page pool round trips),
+  ``paged`` (page-granular `PagedKVCache` with sparse selection),
+  ``continuous`` (continuous-batching scheduler, resident pages);
+- **tier topology** — byte capacities of the device/host/remote tiers
+  (``None`` = unbounded), realized as one `MemoryPoolManager`;
+- **hardware** — a `HardwareSpec` by registry name (serializable) or
+  instance, driving the planner's cost model;
+- **planner knobs** — `InsertionOptions` / `ScheduleOptions`; ``None``
+  insertion means the mode-appropriate default (`PAGED_INSERTION` for the
+  offload modes — the old hard-coded ``min_bytes=1``);
+- **transfer depth policy** — ``"auto"`` derives depth from the consumer's
+  shape via `pool.auto_depth` (f(pages, layers)); an int pins it;
+- **training memory policy** — remat mode and the optimizer-state offload
+  toggle.
+
+``to_dict``/``from_dict`` round-trip through plain JSON types, so a config
+can live in a launch file and is diffable (`python -m repro.api
+--print-config`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Union
+
+import jax.numpy as jnp
+
+from repro.core.costmodel import ASCEND_LIKE, TPU_V5E, HardwareSpec
+from repro.core.insertion import PAGED_INSERTION, InsertionOptions
+from repro.core.schedule import ScheduleOptions
+from repro.pool.transfer import auto_depth
+
+MODES = ("resident", "kv_offload", "paged", "continuous")
+REMAT_MODES = ("none", "full", "offload")
+
+#: Hardware specs addressable by name in a serialized config.
+HW_SPECS: Dict[str, HardwareSpec] = {
+    TPU_V5E.name: TPU_V5E,
+    ASCEND_LIKE.name: ASCEND_LIKE,
+}
+
+#: modes whose KV tensors live in the pool (mandatory prefetches)
+_OFFLOAD_MODES = ("kv_offload", "paged", "continuous")
+
+
+def _options_from(cls, d: Dict[str, Any]):
+    """Rebuild a frozen options dataclass from a dict, restoring the tuple
+    fields JSON flattened into lists. Unknown keys are a hard error — a
+    typo in a launch file must not silently fall back to a default."""
+    known = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(
+            f"unknown {cls.__name__} fields: {sorted(unknown)}")
+    return cls(**{k: tuple(v) if isinstance(v, list) else v
+                  for k, v in d.items()})
+
+
+@dataclass(frozen=True)
+class OffloadConfig:
+    """Frozen, serializable front-door configuration (see module doc)."""
+
+    mode: str = "resident"
+
+    # -- hardware + tier topology (bytes; None = unbounded) -------------
+    hw: Union[str, HardwareSpec] = TPU_V5E.name
+    device_capacity: Optional[int] = None
+    host_capacity: Optional[int] = None
+    remote_capacity: Optional[int] = None
+
+    # -- transfer depth policy ------------------------------------------
+    transfer_depth: Union[str, int] = "auto"   # "auto" = f(pages, layers)
+    transfer_workers: int = 2
+
+    # -- serving geometry -----------------------------------------------
+    max_seq: int = 128
+    max_batch: int = 4
+    prefill_budget: int = 1
+    page_size: int = 32
+    cache_dtype: str = "float32"
+
+    # -- planner knobs --------------------------------------------------
+    insertion: Optional[InsertionOptions] = None   # None → mode default
+    schedule: ScheduleOptions = field(default_factory=ScheduleOptions)
+    refine: bool = True
+
+    # -- training memory policy -----------------------------------------
+    remat: str = "none"
+    offload_opt_state: bool = False
+    host_memory_kind: Optional[str] = None   # None = probe the platform
+
+    def __post_init__(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.remat not in REMAT_MODES:
+            raise ValueError(f"remat {self.remat!r} not in {REMAT_MODES}")
+        if isinstance(self.hw, str) and self.hw not in HW_SPECS:
+            raise ValueError(
+                f"unknown hardware {self.hw!r}; have {sorted(HW_SPECS)} "
+                "(or pass a HardwareSpec instance)")
+        if not (self.transfer_depth == "auto"
+                or (isinstance(self.transfer_depth, int)
+                    and self.transfer_depth >= 1)):
+            raise ValueError(
+                f"transfer_depth must be 'auto' or an int >= 1, "
+                f"got {self.transfer_depth!r}")
+
+    # ------------------------------------------------------------------
+    @property
+    def hardware(self) -> HardwareSpec:
+        return HW_SPECS[self.hw] if isinstance(self.hw, str) else self.hw
+
+    @property
+    def offload_kv(self) -> bool:
+        """Does this mode park KV state in the pool between steps?"""
+        return self.mode == "kv_offload"
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.cache_dtype)
+
+    def insertion_options(self) -> InsertionOptions:
+        """Explicit options, else the mode default: offload modes plan every
+        pool-resident KV tensor (`PAGED_INSERTION`, the documented old
+        ``min_bytes=1``); resident keeps the cost-model thresholds."""
+        if self.insertion is not None:
+            return self.insertion
+        return PAGED_INSERTION if self.mode in _OFFLOAD_MODES \
+            else InsertionOptions()
+
+    def depth_for(self, *, layers: Optional[int] = None,
+                  pages: Optional[int] = None) -> int:
+        """Resolve the transfer depth for a consumer of the given shape."""
+        if self.transfer_depth == "auto":
+            return auto_depth(layers=layers, pages=pages)
+        return int(self.transfer_depth)
+
+    # -- serialization --------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-JSON-types dict; ``from_dict`` inverts it exactly."""
+        d = dataclasses.asdict(self)
+        hw = self.hw
+        if isinstance(hw, HardwareSpec):
+            # a registered spec serializes by name; a custom one by fields
+            if HW_SPECS.get(hw.name) == hw:
+                d["hw"] = hw.name
+            else:
+                d["hw"] = dataclasses.asdict(hw)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "OffloadConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown OffloadConfig fields: {sorted(unknown)}")
+        kwargs = dict(d)
+        hw = kwargs.get("hw")
+        if isinstance(hw, dict):
+            kwargs["hw"] = HardwareSpec(**hw)
+        if isinstance(kwargs.get("insertion"), dict):
+            kwargs["insertion"] = _options_from(InsertionOptions,
+                                                kwargs["insertion"])
+        if isinstance(kwargs.get("schedule"), dict):
+            kwargs["schedule"] = _options_from(ScheduleOptions,
+                                               kwargs["schedule"])
+        return cls(**kwargs)
+
+    def replace(self, **changes) -> "OffloadConfig":
+        return dataclasses.replace(self, **changes)

@@ -1,0 +1,251 @@
+"""`HyperOffloadSession` — the one front door to the runtime.
+
+The paper's thesis is a single globally-visible layer owning both the
+compile-time plan and the runtime data movement. The session is that layer
+on the API surface: it owns exactly **one** `MemoryPoolManager`, **one**
+`TransferEngine`, and **one** `HyperOffloadPlanner`, and hands out every
+subsystem pre-wired to them:
+
+    cfg = OffloadConfig(mode="kv_offload", max_seq=64)
+    with HyperOffloadSession(cfg) as session:
+        engine = session.serve_engine(model, params)
+        sched  = session.scheduler(model, params)
+        cache  = session.paged_kv(batch=2, n_kv_heads=4, head_dim=64)
+        ex     = session.executor(graph, compute_fns)
+        step   = session.train_step(model, total_steps=100)
+        print(session.stats())          # pool + transfer + serve + sched
+
+Everything the session hands out shares its pool (one capacity ledger, one
+eviction hierarchy), its plan cache (a decode-step plan computed for one
+scheduler is reused by the next), and its transfer engine — whose in-flight
+depth grows to cover the largest consumer via the ``auto`` depth policy
+(`pool.auto_depth`) instead of each call site hard-coding its own.
+
+Subsystem constructors remain importable for one release behind thin
+deprecation shims (`ServeEngine(offload_kv=True)` etc. still work and warn);
+new code should only ever construct through the session.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.config import OffloadConfig
+from repro.core.ir import Graph
+from repro.core.jax_exec import PlanExecutor
+from repro.core.planner import HyperOffloadPlanner, OffloadPlan
+from repro.offload.kvcache import PagedKVCache
+from repro.pool import MemoryPoolManager, default_pool
+from repro.sched.scheduler import ContinuousScheduler, SchedulerConfig
+from repro.serving.engine import ServeEngine
+from repro.training.step import TrainStepConfig, make_train_step
+from repro.training.step import init_train_state as _init_train_state
+
+
+class HyperOffloadSession:
+    """One pool, one transfer engine, one planner — shared by every
+    subsystem the session constructs (see module doc)."""
+
+    def __init__(self, config: Optional[OffloadConfig] = None, *,
+                 device: Optional[jax.Device] = None,
+                 pool: Optional[MemoryPoolManager] = None) -> None:
+        self.config = config if config is not None else OffloadConfig()
+        c = self.config
+        self._owns_pool = pool is None
+        if pool is None:
+            pool = default_pool(
+                device_capacity=c.device_capacity,
+                host_capacity=c.host_capacity,
+                remote_capacity=c.remote_capacity,
+                device=device,
+                transfer_depth=c.depth_for(),
+                transfer_workers=c.transfer_workers)
+        self.pool = pool
+        self.transfer = pool.transfer
+        if c.transfer_depth != "auto":
+            # the pin applies to injected pools too — subsystems must not
+            # grow an explicitly configured depth
+            self.transfer.ensure_depth(c.depth_for())
+            self.transfer.depth_pinned = True
+        self.planner = HyperOffloadPlanner(
+            c.hardware, insert_opts=c.insertion_options(),
+            sched_opts=c.schedule)
+        self._plan_cache: Dict[Any, OffloadPlan] = {}
+        self._engines: List[ServeEngine] = []
+        self._schedulers: List[ContinuousScheduler] = []
+        self._paged: List[PagedKVCache] = []
+        self._closed = False
+
+    # -- planning -------------------------------------------------------
+    def plan(self, graph: Graph, *, key: Optional[Any] = None,
+             refine: Optional[bool] = None) -> OffloadPlan:
+        """Plan ``graph`` with the session's planner. A hashable ``key``
+        memoizes the plan in the session's cache (shared with the
+        schedulers' `PlanPrefetcher`s)."""
+        refine = self.config.refine if refine is None else refine
+        cache_key = None if key is None else (key, refine)
+        if cache_key is not None and cache_key in self._plan_cache:
+            return self._plan_cache[cache_key]
+        plan = self.planner.plan(graph, refine=refine)
+        if cache_key is not None:
+            self._plan_cache[cache_key] = plan
+        return plan
+
+    # -- serving --------------------------------------------------------
+    def serve_engine(self, model, params, *, max_seq: Optional[int] = None,
+                     cache_dtype=None,
+                     offload_kv: Optional[bool] = None) -> ServeEngine:
+        """A `ServeEngine` over the session pool. Offload behavior follows
+        ``config.mode`` (``kv_offload`` ⇒ pool round trips); pass
+        ``offload_kv`` to override per engine."""
+        offload = self.config.offload_kv if offload_kv is None else offload_kv
+        engine = ServeEngine(
+            model, params,
+            max_seq=self.config.max_seq if max_seq is None else max_seq,
+            cache_dtype=cache_dtype if cache_dtype is not None
+            else self.config.dtype,
+            offload_kv=offload, pool=self.pool)
+        self._engines.append(engine)
+        return engine
+
+    def scheduler(self, model, params,
+                  cfg: Optional[SchedulerConfig] = None,
+                  **overrides) -> ContinuousScheduler:
+        """A `ContinuousScheduler` over the session pool and plan cache.
+        The `SchedulerConfig` is derived from the session config; keyword
+        ``overrides`` (``max_batch=…``, ``prefill_budget=…``, …) or a full
+        ``cfg`` replace individual fields."""
+        c = self.config
+        if cfg is None:
+            base: Dict[str, Any] = dict(
+                max_batch=c.max_batch, max_seq=c.max_seq,
+                prefill_budget=c.prefill_budget, kv_offload=c.offload_kv,
+                cache_dtype=c.dtype, hw=c.hardware,
+                insert_opts=c.insertion_options(), refine=c.refine)
+            base.update(overrides)
+            cfg = SchedulerConfig(**base)
+        elif overrides:
+            raise TypeError("pass either cfg or field overrides, not both")
+        sched = ContinuousScheduler(model, params, cfg, pool=self.pool,
+                                    plan_cache=self._plan_cache)
+        self._schedulers.append(sched)
+        return sched
+
+    def paged_kv(self, *, batch: int, n_kv_heads: int, head_dim: int,
+                 max_seq: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 dtype=None) -> PagedKVCache:
+        """A `PagedKVCache` storing its pages in the session pool. (Each
+        subsystem declares its own depth need to the shared engine — see
+        `pool.auto_depth`.)"""
+        max_seq = self.config.max_seq if max_seq is None else max_seq
+        page_size = self.config.page_size if page_size is None else page_size
+        cache = PagedKVCache.create(
+            batch=batch, max_seq=max_seq, page_size=page_size,
+            n_kv_heads=n_kv_heads, head_dim=head_dim,
+            dtype=dtype if dtype is not None else self.config.dtype,
+            pool=self.pool)
+        self._paged.append(cache)
+        return cache
+
+    # -- plan execution -------------------------------------------------
+    def executor(self, graph: Graph, compute_fns: Mapping[str, Callable],
+                 *, device: Optional[jax.Device] = None) -> PlanExecutor:
+        """A sync `PlanExecutor` running against the session pool."""
+        return PlanExecutor(graph, compute_fns, device=device, pool=self.pool)
+
+    # -- training -------------------------------------------------------
+    def train_config(self, **overrides) -> TrainStepConfig:
+        """`TrainStepConfig` with the memory policy (remat mode, optimizer
+        -state offload, host memory kind) taken from the session config;
+        ``overrides`` set the optimization hyperparameters."""
+        base: Dict[str, Any] = dict(
+            remat=self.config.remat,
+            offload_opt_state=self.config.offload_opt_state,
+            host_kind=self.config.host_memory_kind)
+        base.update(overrides)
+        return TrainStepConfig(**base)
+
+    def train_step(self, model, ts: Optional[TrainStepConfig] = None, *,
+                   jit: bool = True, **overrides) -> Callable:
+        if ts is not None and overrides:
+            raise TypeError("pass either ts or field overrides, not both")
+        return make_train_step(model, ts or self.train_config(**overrides),
+                               jit=jit)
+
+    def init_train_state(self, model, key, dtype=jnp.float32,
+                         ts: Optional[TrainStepConfig] = None, **overrides):
+        if ts is not None and overrides:
+            raise TypeError("pass either ts or field overrides, not both")
+        return _init_train_state(model, key, dtype,
+                                 ts=ts or self.train_config(**overrides))
+
+    # -- observability --------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """One merged snapshot: pool (incl. transfer + per-tier occupancy)
+        plus aggregated serve/sched/paged counters across every subsystem
+        this session handed out."""
+        serve = {"engines": len(self._engines), "prefill_tokens": 0,
+                 "decoded_tokens": 0, "cache_round_trips": 0}
+        for e in self._engines:
+            serve["prefill_tokens"] += e.stats.prefill_tokens
+            serve["decoded_tokens"] += e.stats.decoded_tokens
+            serve["cache_round_trips"] += e.stats.cache_round_trips
+
+        sched = {"schedulers": len(self._schedulers), "steps": 0, "joins": 0,
+                 "retires": 0, "prefill_tokens": 0, "decoded_tokens": 0,
+                 "pages_parked": 0, "cold_spills": 0, "admission_blocked": 0}
+        prefetch = {"steps": 0, "fetches_issued": 0, "layers_planned": 0}
+        leads: List[float] = []
+        for s in self._schedulers:
+            for k in ("steps", "joins", "retires", "prefill_tokens",
+                      "decoded_tokens", "pages_parked", "cold_spills"):
+                sched[k] += getattr(s.stats, k)
+            sched["admission_blocked"] += s.admission.blocked
+            pf = s.prefetch_stats()
+            if pf is not None:
+                for k in ("steps", "fetches_issued", "layers_planned"):
+                    prefetch[k] += int(pf[k])
+                leads.append(pf["mean_plan_lead"])
+        if leads:
+            prefetch["mean_plan_lead"] = sum(leads) / len(leads)
+        sched["prefetch"] = prefetch
+
+        paged = {"caches": len(self._paged), "fetches": 0, "flushes": 0,
+                 "tokens": 0}
+        for p in self._paged:
+            paged["fetches"] += p.fetches
+            paged["flushes"] += p.flushes
+            paged["tokens"] += p.length
+
+        return {
+            "mode": self.config.mode,
+            "pool": self.pool.snapshot(),
+            "serve": serve,
+            "sched": sched,
+            "paged": paged,
+            "plans_cached": len(self._plan_cache),
+        }
+
+    # -- lifecycle ------------------------------------------------------
+    def close(self) -> None:
+        """Idempotent: shut down every subsystem, then the pool (if owned).
+        Subsystems never close the shared pool themselves."""
+        if self._closed:
+            return
+        self._closed = True
+        for s in self._schedulers:
+            s.close()
+        for e in self._engines:
+            e.close()
+        if self._owns_pool:
+            self.pool.close()
+
+    def __enter__(self) -> "HyperOffloadSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

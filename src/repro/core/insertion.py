@@ -45,6 +45,14 @@ class InsertionOptions:
     force_tensors: Tuple[str, ...] = ()
 
 
+#: The paged-serving default (``OffloadConfig`` modes ``paged`` /
+#: ``kv_offload`` / ``continuous``): pool-resident KV tensors *must* be
+#: planned — their prefetch is mandatory, not a cost-model choice — so the
+#: size filter is disabled. Was hard-coded at the PlanPrefetcher call site
+#: before the ``repro.api`` front door existed.
+PAGED_INSERTION = InsertionOptions(min_bytes=1)
+
+
 def _node_durations(graph: Graph, hw: HardwareSpec,
                     order: Sequence[str]) -> Dict[str, float]:
     return {

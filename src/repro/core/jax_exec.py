@@ -14,7 +14,7 @@ everything-resident baseline (tests/test_substrates.py).
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Mapping, Optional, Sequence
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence
 
 import jax
 
@@ -26,15 +26,23 @@ from repro.pool.manager import MemoryPoolManager, default_pool
 class PlanExecutor:
     """Sync facade: validates fn bindings eagerly, owns a throwaway pool
     per ``run`` unless one is injected, and waits every transfer before
-    returning."""
+    returning.
+
+    The front-door spelling is ``session.executor(graph, fns)``
+    (`repro.api.HyperOffloadSession`), which injects the session's shared
+    pool; ``session=`` here accepts any object with a ``.pool`` and is
+    equivalent."""
 
     def __init__(self, graph: Graph,
                  compute_fns: Mapping[str, Callable],
                  device: Optional[jax.Device] = None,
-                 pool: Optional[MemoryPoolManager] = None) -> None:
+                 pool: Optional[MemoryPoolManager] = None,
+                 session: Optional[Any] = None) -> None:
         self.graph = graph
         self.fns = dict(compute_fns)
         self.device = device or jax.devices()[0]
+        if pool is None and session is not None:
+            pool = session.pool
         self._pool = pool
         missing = [n for n, node in graph.nodes.items()
                    if node.kind == "compute" and n not in self.fns]

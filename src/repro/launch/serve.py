@@ -1,21 +1,25 @@
-"""Serving launcher: batched generation with optional KV-cache offload.
+"""Serving launcher: batched generation through the `repro.api` front door.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
-        --prompt-len 32 --new-tokens 32 --batch 4 [--offload-kv]
+        --prompt-len 32 --new-tokens 32 --batch 4 [--mode kv_offload]
+
+``--mode`` selects the `OffloadConfig` mode (``--offload-kv`` remains as a
+deprecated alias for ``--mode kv_offload``).
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 
+from repro.api import HyperOffloadSession, OffloadConfig
 from repro.configs import REGISTRY
 from repro.data.pipeline import SyntheticTokens
 from repro.models.model import build_model
-from repro.serving.engine import ServeEngine
 
 
 def main(argv=None) -> int:
@@ -25,10 +29,20 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--offload-kv", action="store_true")
+    # this launcher drives ServeEngine only — the paged/continuous modes
+    # live in examples/serve_offload.py and benchmarks/serve_continuous.py
+    ap.add_argument("--mode", choices=("resident", "kv_offload"),
+                    default=None)
+    ap.add_argument("--offload-kv", action="store_true",
+                    help="deprecated: use --mode kv_offload")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.offload_kv and args.mode is None:
+        warnings.warn("--offload-kv is deprecated; use --mode kv_offload",
+                      DeprecationWarning)
+        args.mode = "kv_offload"
+    mode = args.mode or "resident"
 
     cfg = REGISTRY[args.arch]
     if args.smoke:
@@ -40,18 +54,21 @@ def main(argv=None) -> int:
     batch = data.batch(0, cfg)
     batch.pop("targets", None)
 
-    max_seq = args.prompt_len + args.new_tokens
-    engine = ServeEngine(model, params, max_seq=max_seq,
-                         offload_kv=args.offload_kv)
-    t0 = time.time()
-    out = engine.generate(batch, args.new_tokens,
-                          temperature=args.temperature, seed=args.seed)
-    dt = time.time() - t0
-    toks = args.batch * args.new_tokens
-    print(f"arch={cfg.name} offload_kv={args.offload_kv} "
-          f"generated {out.shape} in {dt:.2f}s ({toks/dt:.1f} tok/s)")
-    print("first sequence:", out[0].tolist())
-    print(f"stats: {engine.stats}")
+    config = OffloadConfig(mode=mode, max_batch=args.batch,
+                           max_seq=args.prompt_len + args.new_tokens)
+    with HyperOffloadSession(config) as session:
+        engine = session.serve_engine(model, params)
+        t0 = time.time()
+        out = engine.generate(batch, args.new_tokens,
+                              temperature=args.temperature, seed=args.seed)
+        dt = time.time() - t0
+        toks = args.batch * args.new_tokens
+        print(f"arch={cfg.name} mode={mode} "
+              f"generated {out.shape} in {dt:.2f}s ({toks/dt:.1f} tok/s)")
+        print("first sequence:", out[0].tolist())
+        s = session.stats()
+        print(f"stats: {s['serve']} pool_puts={s['pool']['puts']} "
+              f"pool_gets={s['pool']['gets']}")
     return 0
 
 

@@ -19,12 +19,12 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import HyperOffloadSession, OffloadConfig
 from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
 from repro.configs import REGISTRY
 from repro.data.pipeline import SyntheticTokens
 from repro.models.model import build_model
 from repro.optim.adamw import AdamWState
-from repro.training.step import TrainStepConfig, init_train_state, make_train_step
 
 
 def main(argv=None) -> int:
@@ -48,13 +48,17 @@ def main(argv=None) -> int:
     if args.smoke:
         cfg = cfg.reduced()
     model = build_model(cfg)
-    ts = TrainStepConfig(remat=args.remat,
-                         offload_opt_state=args.offload_opt_state,
-                         peak_lr=args.peak_lr,
-                         warmup=max(1, args.steps // 10),
-                         total_steps=args.steps)
-    params, opt_state = init_train_state(model, jax.random.key(args.seed), ts=ts)
-    step_fn = make_train_step(model, ts)
+    # the memory policy (remat / optimizer-state offload) lives in the
+    # session config; optimization hyperparameters override per run
+    session = HyperOffloadSession(OffloadConfig(
+        mode="resident", remat=args.remat,
+        offload_opt_state=args.offload_opt_state))
+    ts = session.train_config(peak_lr=args.peak_lr,
+                              warmup=max(1, args.steps // 10),
+                              total_steps=args.steps)
+    params, opt_state = session.init_train_state(
+        model, jax.random.key(args.seed), ts=ts)
+    step_fn = session.train_step(model, ts)
     data = SyntheticTokens(cfg.vocab_size, seq_len=args.seq_len,
                            global_batch=args.batch, seed=args.seed, noise=0.05)
 
@@ -81,6 +85,7 @@ def main(argv=None) -> int:
             save_checkpoint(os.path.join(args.ckpt_dir, "latest.npz"), params, i + 1)
     final_loss = float(metrics["loss"])
     print(f"done: final loss {final_loss:.4f}")
+    session.close()
     return 0
 
 

@@ -11,7 +11,9 @@ The host kind is probed through ``repro.pool.backend`` rather than
 hard-coded: ``pinned_host`` where addressable (TPU/GPU), ``unpinned_host``
 on XLA:CPU, and a NumPy host buffer as the last-resort fallback on
 platforms with no memory-kind support at all — offload never raises, it
-degrades.
+degrades. A specific kind can be forced per setup via
+``OffloadConfig.host_memory_kind`` (threaded through
+``TrainStepConfig.host_kind`` by ``HyperOffloadSession.train_step``).
 """
 
 from __future__ import annotations

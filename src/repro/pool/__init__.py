@@ -20,7 +20,9 @@ from repro.pool.backend import (
 from repro.pool.manager import (
     MemoryPoolManager, PoolCapacityError, PoolEntry, TierState, default_pool,
 )
-from repro.pool.transfer import TransferEngine, TransferHandle, TransferStats
+from repro.pool.transfer import (
+    TransferEngine, TransferHandle, TransferStats, auto_depth,
+)
 from repro.pool.executor import ExecutionTrace, OffloadPlanExecutor
 
 __all__ = [
@@ -30,6 +32,6 @@ __all__ = [
     "to_device", "to_host",
     "MemoryPoolManager", "PoolCapacityError", "PoolEntry", "TierState",
     "default_pool",
-    "TransferEngine", "TransferHandle", "TransferStats",
+    "TransferEngine", "TransferHandle", "TransferStats", "auto_depth",
     "ExecutionTrace", "OffloadPlanExecutor",
 ]

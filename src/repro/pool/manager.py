@@ -345,8 +345,16 @@ def default_pool(host_capacity: Optional[int] = None,
                  remote_capacity: Optional[int] = None,
                  device_capacity: Optional[int] = None,
                  device=None,
-                 transfer: Optional[TransferEngine] = None) -> MemoryPoolManager:
-    """The standard three-tier pool: device HBM → host → simulated remote."""
+                 transfer: Optional[TransferEngine] = None, *,
+                 transfer_depth: Optional[int] = None,
+                 transfer_workers: int = 2) -> MemoryPoolManager:
+    """The standard three-tier pool: device HBM → host → simulated remote.
+
+    ``transfer_depth``/``transfer_workers`` build the engine here so callers
+    outside the pool subsystem never construct a ``TransferEngine`` — depth
+    comes from ``transfer.auto_depth`` (or ``OffloadConfig``)."""
+    if transfer is None and transfer_depth is not None:
+        transfer = TransferEngine(depth=transfer_depth, workers=transfer_workers)
     tiers = [
         TierState(B.DEVICE_TIER, B.DeviceBackend(device), device_capacity),
         TierState(B.HOST_TIER, B.make_host_backend(device), host_capacity),

@@ -23,6 +23,34 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, Optional
 
+#: floor for the auto depth policy — always enough for classic double
+#: buffering plus a few leaves of headroom
+MIN_AUTO_DEPTH = 8
+
+
+def auto_depth(*, layers: Optional[int] = None, pages: Optional[int] = None,
+               minimum: int = MIN_AUTO_DEPTH) -> int:
+    """The one transfer-depth policy (``OffloadConfig.transfer_depth="auto"``).
+
+    Depth is sized so one step's worth of fetches issues completely before
+    anything waits, while still bounding staging memory:
+
+    - whole-cache round trips (``ServeEngine``): 2 K/V leaves per layer plus
+      2× headroom → ``4 * layers``;
+    - page-granular prefetch (scheduler / ``PagedKVCache``): every page's
+      K and V fetch in flight at once → ``2 * pages``.
+
+    Callers pass whichever dimensions they know; the policy takes the max.
+    This replaces the per-call-site magic numbers the subsystems used to
+    hard-code.
+    """
+    depth = int(minimum)
+    if layers:
+        depth = max(depth, 4 * int(layers))
+    if pages:
+        depth = max(depth, 2 * int(pages))
+    return depth
+
 
 @dataclass
 class TransferStats:
@@ -83,12 +111,24 @@ class TransferEngine:
         if depth < 1:
             raise ValueError("depth must be >= 1")
         self.depth = depth
+        self.depth_pinned = False   # True ⇒ ensure_depth is a no-op
         self._pool = ThreadPoolExecutor(max_workers=workers,
                                         thread_name_prefix="pool-xfer")
         self._in_flight: Deque[TransferHandle] = deque()
         self._lock = threading.Lock()
         self._seq = 0
         self.stats = TransferStats()
+
+    def ensure_depth(self, depth: int) -> None:
+        """Raise the in-flight bound to at least ``depth`` (never lowers).
+
+        A shared engine serves every subsystem of a session: each consumer
+        declares the depth its issue pattern needs (via ``auto_depth``) and
+        the engine grows to cover the largest one. An explicitly pinned
+        depth (``OffloadConfig(transfer_depth=<int>)``) is never raised."""
+        with self._lock:
+            if not self.depth_pinned:
+                self.depth = max(self.depth, int(depth))
 
     # ------------------------------------------------------------------
     def submit(self, fn: Callable[[], Any], key: Optional[str] = None

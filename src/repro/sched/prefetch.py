@@ -23,14 +23,14 @@ real overlap.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Sequence, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import HardwareSpec, TPU_V5E
-from repro.core.insertion import InsertionOptions
-from repro.core.planner import HyperOffloadPlanner
+from repro.core.insertion import PAGED_INSERTION, InsertionOptions
+from repro.core.planner import HyperOffloadPlanner, OffloadPlan
 from repro.core.tracer import TraceOptions, trace_decode_step
 from repro.pool.manager import MemoryPoolManager
 from repro.pool.transfer import TransferHandle
@@ -76,14 +76,25 @@ class PrefetchStats:
 class PlanPrefetcher:
     def __init__(self, cfg: ModelConfig, batch: int, max_seq: int, *,
                  pool: MemoryPoolManager, hw: HardwareSpec = TPU_V5E,
-                 refine: bool = True) -> None:
+                 refine: bool = True,
+                 insert_opts: Optional[InsertionOptions] = None,
+                 plan_cache: Optional[Dict[Any, OffloadPlan]] = None) -> None:
         self.pool = pool
-        g = trace_decode_step(cfg, batch, max_seq,
-                              TraceOptions(remote_kv=True))
-        # min_bytes=1: the mandatory prefetch of every pool-resident KV
-        # tensor must be planned even for smoke-scale models
-        planner = HyperOffloadPlanner(hw, insert_opts=InsertionOptions(min_bytes=1))
-        self.plan = planner.plan(g, refine=refine)
+        # insertion options come from the session/config; the fallback is
+        # the documented paged default (min_bytes=1 — the mandatory prefetch
+        # of every pool-resident KV tensor must be planned even for
+        # smoke-scale models)
+        opts = insert_opts if insert_opts is not None else PAGED_INSERTION
+        key = ("decode_plan", cfg.name, batch, max_seq, refine, hw.name, opts)
+        if plan_cache is not None and key in plan_cache:
+            self.plan = plan_cache[key]
+        else:
+            g = trace_decode_step(cfg, batch, max_seq,
+                                  TraceOptions(remote_kv=True))
+            planner = HyperOffloadPlanner(hw, insert_opts=opts)
+            self.plan = planner.plan(g, refine=refine)
+            if plan_cache is not None:
+                plan_cache[key] = self.plan
         pos = {n: i for i, n in enumerate(self.plan.order)}
         # issue schedule: layer index of each prefetch::kv_i, in plan order
         self.issue_order: List[int] = []

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -42,10 +43,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import HardwareSpec, TPU_V5E
+from repro.core.insertion import InsertionOptions
 from repro.models.model import Model
 from repro.offload.kvcache import KVPageTable, worst_case_page_bytes
 from repro.pool import (
-    DEVICE_TIER, MemoryPoolManager, TransferEngine, default_pool,
+    DEVICE_TIER, MemoryPoolManager, auto_depth, default_pool,
 )
 from repro.pool.manager import PoolEntry
 from repro.sched.prefetch import InFlightFetches, PlanPrefetcher
@@ -65,6 +67,11 @@ class SchedulerConfig:
     kv_offload: bool = False      # pages live in the pool between steps
     cache_dtype: Any = jnp.float32
     hw: HardwareSpec = TPU_V5E    # cost model driving the prefetch plan
+    # planner knobs for the prefetch plan; None → the paged default
+    # (PAGED_INSERTION). A session-built scheduler gets these from its
+    # OffloadConfig instead of the old call-site hard-coding.
+    insert_opts: Optional[InsertionOptions] = None
+    refine: bool = True
 
 
 @dataclasses.dataclass
@@ -81,7 +88,8 @@ class SchedStats:
 class ContinuousScheduler:
     def __init__(self, model: Model, params: Any,
                  cfg: SchedulerConfig = SchedulerConfig(), *,
-                 pool: Optional[MemoryPoolManager] = None) -> None:
+                 pool: Optional[MemoryPoolManager] = None,
+                 plan_cache: Optional[Dict[Any, Any]] = None) -> None:
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -103,13 +111,26 @@ class ContinuousScheduler:
             for pi in range(len(seg.pattern))
         ]
         self._owns_pool = pool is None
+        # one full step's page fetches (every leaf of every slot) must
+        # issue before anything waits — the auto depth policy's `pages`
+        pages = cfg.max_batch * sum(
+            len(jax.tree.leaves(self.cache["segments"][si][f"p{pi}"]))
+            for si, _, pi in self._flat)
         if pool is None:
-            # transfer depth covers one full step's page fetches so the
-            # whole plan issues before anything waits
-            pages = cfg.max_batch * sum(
-                len(jax.tree.leaves(self.cache["segments"][si][f"p{pi}"]))
-                for si, _, pi in self._flat)
-            pool = default_pool(transfer=TransferEngine(depth=max(8, 2 * pages)))
+            if cfg.kv_offload:
+                # Deprecation shim: a private pool keeps old call sites
+                # working for one release; new code constructs through
+                # repro.api.HyperOffloadSession.scheduler.
+                warnings.warn(
+                    "ContinuousScheduler(kv_offload=True) without a pool "
+                    "builds a private MemoryPoolManager; construct "
+                    "schedulers through repro.api.HyperOffloadSession."
+                    "scheduler (mode='kv_offload') instead",
+                    DeprecationWarning, stacklevel=2)
+            pool = default_pool(transfer_depth=auto_depth(pages=pages))
+        elif cfg.kv_offload:
+            # shared (session) pool: grow the engine to cover this consumer
+            pool.transfer.ensure_depth(auto_depth(pages=pages))
         self.pool = pool
         self.queue = ArrivalQueue()
         self.admission = AdmissionController(self.pool)
@@ -121,7 +142,8 @@ class ContinuousScheduler:
         if cfg.kv_offload:
             self.prefetcher = PlanPrefetcher(
                 model.cfg, cfg.max_batch, cfg.max_seq, pool=self.pool,
-                hw=cfg.hw)
+                hw=cfg.hw, refine=cfg.refine, insert_opts=cfg.insert_opts,
+                plan_cache=plan_cache)
             self.pool.add_evict_listener(self._on_evict)
         self.now = 0.0
         self._closed = False

@@ -21,13 +21,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model
-from repro.pool import HOST_TIER, MemoryPoolManager, TransferEngine, default_pool
+from repro.pool import HOST_TIER, MemoryPoolManager, auto_depth, default_pool
 from repro.serving.sampling import sample_token
 
 
@@ -66,13 +67,25 @@ class ServeEngine:
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
         self.offload_kv = offload_kv
-        # transfer depth sized so one whole cache's leaves (2 per layer,
-        # plus headroom) issue before any wait — depth still bounds staging
-        depth = 4 * getattr(getattr(model, "cfg", None), "n_layers", 16)
+        # auto depth policy: one whole cache's leaves issue before any
+        # wait (2 K/V leaves per layer plus headroom)
+        depth = auto_depth(
+            layers=getattr(getattr(model, "cfg", None), "n_layers", 16))
         self._owns_pool = pool is None and offload_kv
-        self.pool = pool if pool is not None else (
-            default_pool(transfer=TransferEngine(depth=depth))
-            if offload_kv else None)
+        if self._owns_pool:
+            # Deprecation shim: the engine builds a private pool so old
+            # call sites keep working for one release. New code constructs
+            # through the session, which shares one pool across subsystems.
+            warnings.warn(
+                "ServeEngine(offload_kv=True) without a pool builds a "
+                "private MemoryPoolManager; construct engines through "
+                "repro.api.HyperOffloadSession.serve_engine (mode="
+                "'kv_offload') instead", DeprecationWarning, stacklevel=2)
+            pool = default_pool(transfer_depth=depth)
+        elif offload_kv and pool is not None:
+            # shared (session) pool: declare this consumer's depth need
+            pool.transfer.ensure_depth(depth)
+        self.pool = pool
         self._key_ns = f"serve{next(_ENGINE_IDS)}"
         self._kv_keys: list = []     # stable per-leaf pool keys, grown on demand
         self._closed = False

@@ -31,6 +31,9 @@ from repro.optim.schedule import cosine_schedule
 class TrainStepConfig:
     remat: str = "none"              # none | full | offload
     offload_opt_state: bool = False
+    # memory kind for parked moments (None = probe the platform); comes
+    # from OffloadConfig.host_memory_kind when built through the session
+    host_kind: Optional[str] = None
     peak_lr: float = 3e-4
     warmup: int = 100
     total_steps: int = 10_000
@@ -118,8 +121,8 @@ def make_train_step(model: Model, ts: TrainStepConfig = TrainStepConfig(),
     def step_with_park(params, opt_state: AdamWState, batch):
         new_params, new_state, metrics = step(params, opt_state, batch)
         new_state = AdamWState(step=new_state.step,
-                               mu=host_offload_state(new_state.mu),
-                               nu=host_offload_state(new_state.nu))
+                               mu=host_offload_state(new_state.mu, ts.host_kind),
+                               nu=host_offload_state(new_state.nu, ts.host_kind))
         return new_params, new_state, metrics
 
     return step_with_park
@@ -132,6 +135,6 @@ def init_train_state(model: Model, key, dtype=jnp.float32,
     if ts.offload_opt_state:
         from repro.offload.optstate import host_offload_state
         opt_state = AdamWState(step=opt_state.step,
-                               mu=host_offload_state(opt_state.mu),
-                               nu=host_offload_state(opt_state.nu))
+                               mu=host_offload_state(opt_state.mu, ts.host_kind),
+                               nu=host_offload_state(opt_state.nu, ts.host_kind))
     return params, opt_state

@@ -1,0 +1,269 @@
+"""The `repro.api` front door: `OffloadConfig` serialization and surface
+pinning, `HyperOffloadSession` single-pool wiring, the config-derived
+transfer-depth policy, and the deprecation shims that keep the old
+per-subsystem constructors working for one release."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api
+from repro.api import HyperOffloadSession, OffloadConfig
+from repro.api.__main__ import main as api_main
+from repro.configs import REGISTRY
+from repro.core.costmodel import HardwareSpec
+from repro.core.insertion import PAGED_INSERTION, InsertionOptions
+from repro.core.schedule import ScheduleOptions
+from repro.models.model import build_model
+from repro.offload.kvcache import PagedKVCache
+from repro.pool import auto_depth
+from repro.sched import ContinuousScheduler, Request, SchedulerConfig
+from repro.serving.engine import ServeEngine
+
+CFG = REGISTRY["phi3-mini-3.8b"].reduced()
+MAX_SEQ = 32
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    m = build_model(CFG)
+    return m, m.init(jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# public surface + config serialization
+# ---------------------------------------------------------------------------
+
+
+def test_public_api_surface_is_pinned():
+    assert repro.api.__all__ == [
+        "OffloadConfig",
+        "HyperOffloadSession",
+        "HW_SPECS",
+        "MODES",
+    ]
+
+
+def test_config_round_trips_through_json():
+    cfg = OffloadConfig(
+        mode="kv_offload",
+        hw="ascend_910c_like",
+        device_capacity=1 << 20,
+        host_capacity=1 << 22,
+        transfer_depth=16,
+        max_seq=64, max_batch=2, prefill_budget=2,
+        cache_dtype="bfloat16",
+        insertion=InsertionOptions(min_bytes=4096,
+                                   force_prefixes=("kv_",)),
+        schedule=ScheduleOptions(max_candidates=8),
+        remat="offload", offload_opt_state=True)
+    wire = json.loads(json.dumps(cfg.to_dict()))
+    assert OffloadConfig.from_dict(wire) == cfg
+
+
+def test_config_round_trips_custom_hardware():
+    hw = HardwareSpec(name="lab_box", flops=1e12, hbm_bw=1e11,
+                      hbm_bytes=8e9, pool_bw_d2r=1e10, pool_bw_r2d=1e10,
+                      link_bw=1e10)
+    cfg = OffloadConfig(hw=hw)
+    wire = json.loads(json.dumps(cfg.to_dict()))
+    back = OffloadConfig.from_dict(wire)
+    assert back.hardware == hw
+    # a registered spec serializes compactly, by name
+    assert OffloadConfig(hw="tpu_v5e").to_dict()["hw"] == "tpu_v5e"
+
+
+def test_config_validates_fields():
+    with pytest.raises(ValueError, match="mode"):
+        OffloadConfig(mode="turbo")
+    with pytest.raises(ValueError, match="remat"):
+        OffloadConfig(remat="sometimes")
+    with pytest.raises(ValueError, match="hardware"):
+        OffloadConfig(hw="abacus")
+    with pytest.raises(ValueError, match="transfer_depth"):
+        OffloadConfig(transfer_depth=0)
+    with pytest.raises(ValueError, match="unknown OffloadConfig fields"):
+        OffloadConfig.from_dict({"modee": "resident"})
+    # a typo inside a nested options dict must not silently default
+    with pytest.raises(ValueError, match="unknown InsertionOptions fields"):
+        OffloadConfig.from_dict({"insertion": {"min_byte": 4096}})
+
+
+def test_mode_resolves_planner_and_depth_defaults():
+    # offload modes plan every pool-resident KV tensor (the old hard-coded
+    # min_bytes=1 at the PlanPrefetcher call site); resident keeps the
+    # cost-model threshold
+    assert OffloadConfig(mode="paged").insertion_options() == PAGED_INSERTION
+    assert OffloadConfig(mode="kv_offload").insertion_options().min_bytes == 1
+    assert OffloadConfig().insertion_options().min_bytes == 1 << 20
+    custom = InsertionOptions(min_bytes=7)
+    assert OffloadConfig(mode="paged",
+                         insertion=custom).insertion_options() is custom
+    # depth policy: auto derives from the consumer's shape, int pins
+    auto = OffloadConfig()
+    assert auto.depth_for(layers=16) == auto_depth(layers=16) == 64
+    assert auto.depth_for(pages=40) == 80
+    assert auto.depth_for() == 8                       # floor
+    assert OffloadConfig(transfer_depth=3).depth_for(pages=1000) == 3
+
+
+def test_print_config_cli(capsys):
+    assert api_main(["--print-config"]) == 0
+    dumped = json.loads(capsys.readouterr().out)
+    assert dumped["mode"] == "resident"
+    assert dumped["transfer_depth"] == "auto"
+    # the dump is the default config, exactly (drift detector for CI)
+    resolved = dumped.pop("insertion_resolved")
+    assert OffloadConfig.from_dict(dumped) == OffloadConfig()
+    assert resolved["min_bytes"] == OffloadConfig().insertion_options().min_bytes
+
+
+# ---------------------------------------------------------------------------
+# session wiring
+# ---------------------------------------------------------------------------
+
+
+def test_session_shares_one_pool_and_merges_stats(model_and_params):
+    model, params = model_and_params
+    cfg = OffloadConfig(mode="kv_offload", max_seq=MAX_SEQ, max_batch=2)
+    with HyperOffloadSession(cfg) as session:
+        engine = session.serve_engine(model, params)
+        sched = session.scheduler(model, params)
+        cache = session.paged_kv(batch=1, n_kv_heads=CFG.n_kv_heads,
+                                 head_dim=CFG.head_dim)
+        # exactly one pool / transfer engine behind every subsystem
+        assert engine.pool is session.pool
+        assert sched.pool is session.pool
+        assert cache.pool is session.pool
+        assert session.transfer is session.pool.transfer
+
+        out = engine.generate(
+            {"tokens": jnp.ones((1, 4), jnp.int32)}, 3)
+        assert out.shape == (1, 3)
+        sched.run([Request(tokens=np.ones((4,), np.int32),
+                           max_new_tokens=4, seed=0)])
+
+        s = session.stats()
+        assert s["mode"] == "kv_offload"
+        assert s["serve"]["engines"] == 1
+        assert s["serve"]["decoded_tokens"] == 2      # 3 tokens, 2 decode steps
+        assert s["serve"]["cache_round_trips"] == 2
+        assert s["sched"]["schedulers"] == 1
+        assert s["sched"]["retires"] == 1
+        assert s["sched"]["prefetch"]["fetches_issued"] > 0
+        assert s["paged"]["caches"] == 1
+        assert s["pool"]["puts"] > 0 and "transfer" in s["pool"]
+        assert s["plans_cached"] == 1
+    # close() is idempotent and reaches the owned pool
+    session.close()
+
+
+def test_session_plan_cache_is_shared(model_and_params):
+    model, params = model_and_params
+    cfg = OffloadConfig(mode="kv_offload", max_seq=MAX_SEQ, max_batch=2)
+    with HyperOffloadSession(cfg) as session:
+        s1 = session.scheduler(model, params)
+        s2 = session.scheduler(model, params)
+        assert s1.prefetcher.plan is s2.prefetcher.plan   # one plan, reused
+        assert session.stats()["plans_cached"] == 1
+
+
+def test_session_auto_depth_grows_pinned_does_not(model_and_params):
+    model, params = model_and_params
+    with HyperOffloadSession(OffloadConfig(mode="kv_offload",
+                                           max_seq=MAX_SEQ)) as session:
+        base = session.transfer.depth
+        session.paged_kv(batch=1, n_kv_heads=CFG.n_kv_heads,
+                         head_dim=CFG.head_dim, max_seq=256, page_size=4)
+        assert session.transfer.depth == max(base, 2 * (256 // 4))
+    with HyperOffloadSession(OffloadConfig(mode="kv_offload",
+                                           max_seq=MAX_SEQ,
+                                           transfer_depth=5)) as session:
+        session.paged_kv(batch=1, n_kv_heads=CFG.n_kv_heads,
+                         head_dim=CFG.head_dim, max_seq=256, page_size=4)
+        assert session.transfer.depth == 5                # pinned
+    # the pin applies to an injected pool too
+    from repro.pool import default_pool
+    ext = default_pool(transfer_depth=5)
+    session = HyperOffloadSession(
+        OffloadConfig(mode="kv_offload", max_seq=MAX_SEQ, transfer_depth=5),
+        pool=ext)
+    session.paged_kv(batch=1, n_kv_heads=CFG.n_kv_heads,
+                     head_dim=CFG.head_dim, max_seq=256, page_size=4)
+    assert ext.transfer.depth == 5
+    session.close()
+    ext.close()
+
+
+def test_session_scheduler_overrides(model_and_params):
+    model, params = model_and_params
+    cfg = OffloadConfig(mode="continuous", max_seq=MAX_SEQ, max_batch=4)
+    with HyperOffloadSession(cfg) as session:
+        sched = session.scheduler(model, params, max_batch=2,
+                                  prefill_budget=2)
+        assert sched.cfg.max_batch == 2
+        assert sched.cfg.prefill_budget == 2
+        assert sched.cfg.kv_offload is False              # continuous = resident
+        with pytest.raises(TypeError, match="not both"):
+            session.scheduler(model, params, SchedulerConfig(), max_batch=2)
+        with pytest.raises(TypeError, match="not both"):
+            session.train_step(model, session.train_config(), total_steps=5)
+        with pytest.raises(TypeError, match="not both"):
+            session.init_train_state(model, jax.random.key(0),
+                                     ts=session.train_config(), total_steps=5)
+
+
+# ---------------------------------------------------------------------------
+# back-compat deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_engine_old_kwargs_still_work_and_warn(model_and_params):
+    model, params = model_and_params
+    prompt = {"tokens": jnp.ones((1, 4), jnp.int32)}
+    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
+        old = ServeEngine(model, params, max_seq=MAX_SEQ, offload_kv=True)
+    out_old = old.generate(prompt, 4)
+    old.close()
+    with HyperOffloadSession(OffloadConfig(mode="kv_offload",
+                                           max_seq=MAX_SEQ)) as session:
+        out_new = session.serve_engine(model, params).generate(prompt, 4)
+    np.testing.assert_array_equal(np.asarray(out_old), np.asarray(out_new))
+
+
+def test_scheduler_old_construction_warns(model_and_params):
+    model, params = model_and_params
+    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
+        sched = ContinuousScheduler(
+            model, params,
+            SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, kv_offload=True))
+    sched.run([Request(tokens=np.ones((4,), np.int32), max_new_tokens=2,
+                       seed=0)])
+    sched.close()
+
+
+def test_paged_old_construction_warns():
+    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
+        cache = PagedKVCache.create(batch=1, max_seq=64, page_size=16,
+                                    n_kv_heads=2, head_dim=8)
+    cache.prefill(jnp.zeros((1, 32, 2, 8)), jnp.zeros((1, 32, 2, 8)))
+    assert cache.full_pages == 2
+    cache.close()
+
+
+def test_session_construction_does_not_warn(model_and_params):
+    """The front-door path is warning-free — the shims only fire on the
+    old implicit-private-pool constructions."""
+    import warnings
+    model, params = model_and_params
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        with HyperOffloadSession(OffloadConfig(mode="kv_offload",
+                                               max_seq=MAX_SEQ)) as session:
+            session.serve_engine(model, params)
+            session.scheduler(model, params)
+            session.paged_kv(batch=1, n_kv_heads=CFG.n_kv_heads,
+                             head_dim=CFG.head_dim)
