@@ -18,6 +18,13 @@ small ``kv_offload`` run reports the plan-driven prefetcher's stats —
 fetches issued ahead of consumption (plan lead ≥ 1, overlapped waits)
 instead of the old store-then-immediately-wait round trip.
 
+A third section drives a mixed short/long-prompt trace through the
+scheduler step by step, whole-prompt vs **chunked prefill**
+(``--chunk-size``): per-step prefill tokens and wall latency show the
+long-prompt stall bounded by the chunk budget, and the jit cache sizes
+show chunked prefill compiling exactly ONE executable where whole-prompt
+prefill compiles one per distinct prompt length.
+
     PYTHONPATH=src python benchmarks/serve_continuous.py [--smoke] [--out F]
 """
 
@@ -37,6 +44,7 @@ from repro.configs import REGISTRY
 from repro.models.model import build_model
 from repro.offload.kvcache import worst_case_page_bytes
 from repro.sched import Request, poisson_trace
+from repro.serving.engine import jit_prefill_chunk
 
 
 def _pct(xs: List[float], q: float) -> float:
@@ -115,6 +123,106 @@ def run_continuous(session, model, params, trace: List[Request], *,
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill vs whole-prompt on long-prompt traffic
+# ---------------------------------------------------------------------------
+
+
+def run_continuous_stepwise(session, model, params, trace: List[Request], *,
+                            chunk_size=None,
+                            prefill_tokens=None) -> Dict[str, float]:
+    """Drive the scheduler step by step, recording per-step wall latency
+    and per-step prefill tokens — the stall metric: whole-prompt prefill
+    spends an entire prompt in one step, chunked prefill never exceeds its
+    token budget."""
+    overrides = {}
+    if chunk_size is not None:
+        overrides = dict(chunk_size=chunk_size, prefill_tokens=prefill_tokens)
+    sched = session.scheduler(model, params, **overrides)
+    for r in trace:
+        sched.submit(r)
+    # run()'s no-progress guard: a scheduler stall must fail CI with a
+    # diagnostic, not hang it
+    max_steps = sched.default_max_steps()
+    step_wall_ms: List[float] = []
+    step_prefill: List[int] = []
+    t0 = time.perf_counter()
+    while len(sched.queue) or sched.active:
+        if not sched.active and sched.queue.head_ready(sched.now) is None:
+            sched.now = max(sched.now, sched.queue.next_arrival())
+        before = sched.stats.prefill_tokens
+        s0 = time.perf_counter()
+        sched.step()
+        step_wall_ms.append((time.perf_counter() - s0) * 1e3)
+        step_prefill.append(sched.stats.prefill_tokens - before)
+        if len(step_wall_ms) > max_steps:
+            raise RuntimeError(
+                f"scheduler made no progress ({len(step_wall_ms)} steps, "
+                f"{len(sched.queue)} queued)")
+    wall = time.perf_counter() - t0
+    tokens = sum(len(st.out) for st in sched.finished.values())
+    lats = [st.t_done - st.request.arrival for st in sched.finished.values()]
+    res = {
+        "tokens": tokens, "wall_s": wall,
+        "virtual_steps": sched.now,
+        "tokens_per_s": tokens / wall,
+        "p50_latency_steps": _pct(lats, 50),
+        "p99_latency_steps": _pct(lats, 99),
+        "max_step_prefill_tokens": max(step_prefill),
+        "p99_step_prefill_tokens": _pct([float(x) for x in step_prefill], 99),
+        "p99_step_wall_ms": _pct(step_wall_ms, 99),
+        "prefill_chunks": sched.stats.prefill_chunks,
+    }
+    sched.close()
+    return res
+
+
+def _jit_cache_size(fn):
+    """Compiled-executable count of a jitted entry point, via jax's
+    private ``_cache_size`` — None when a jax version doesn't expose it
+    (callers must treat None as 'unknown', not assert on it)."""
+    return fn._cache_size() if hasattr(fn, "_cache_size") else None
+
+
+def run_long_prompt_comparison(session, model, params, trace: List[Request],
+                               chunk_size: int,
+                               prefill_tokens) -> Dict[str, Dict[str, float]]:
+    budget = prefill_tokens or chunk_size
+    # warm every prefill shape the trace needs OUTSIDE the timed runs, so
+    # the step-latency comparison measures scheduling stalls rather than
+    # XLA compiles — and count executables over this warm phase: one per
+    # distinct prompt length for whole-prompt prefill, exactly ONE for the
+    # chunk path regardless of length mix
+    lengths = sorted({r.prompt_len for r in trace})
+    c0 = _jit_cache_size(jit_prefill_chunk(model))
+    for i, s in enumerate(lengths):
+        warm = [Request(tokens=np.ones((s,), np.int32), max_new_tokens=2,
+                        seed=2000 + i)]
+        run_continuous_stepwise(session, model, params, warm)
+        run_continuous_stepwise(session, model, params, warm,
+                                chunk_size=chunk_size,
+                                prefill_tokens=prefill_tokens)
+    c1 = _jit_cache_size(jit_prefill_chunk(model))
+    chunk_exec = None if c0 is None else c1 - c0
+
+    whole = run_continuous_stepwise(session, model, params, trace)
+    # the whole-prompt path needs one (1, length) executable per distinct
+    # prompt length in the trace — a jit-cache delta would under-count
+    # lengths other sections of this benchmark already compiled
+    whole["prefill_executables"] = len(lengths)
+    chunked = run_continuous_stepwise(session, model, params, trace,
+                                      chunk_size=chunk_size,
+                                      prefill_tokens=prefill_tokens)
+    chunked["prefill_executables"] = chunk_exec
+    # the acceptance invariants: bounded per-step prefill, one executable
+    assert chunked["max_step_prefill_tokens"] <= budget + chunk_size - 1, \
+        "chunked prefill exceeded its per-step token budget"
+    assert chunk_exec is None or chunk_exec == 1, \
+        "mixed prompt lengths must share ONE compiled chunk executable"
+    return {"whole_prompt": whole, "chunked": chunked,
+            "chunk_size": chunk_size, "prefill_token_budget": budget}
+
+
+# ---------------------------------------------------------------------------
 
 
 def main() -> None:
@@ -125,6 +233,10 @@ def main() -> None:
                     help="Poisson arrivals per scheduler step")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--chunk-size", type=int, default=8,
+                    help="chunked-prefill chunk for the long-prompt section")
+    ap.add_argument("--prefill-tokens", type=int, default=None,
+                    help="per-step prefill token budget (default: one chunk)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace for CI; implies --out BENCH_serving.json")
@@ -176,11 +288,37 @@ def main() -> None:
     offload = run_continuous(off_session, model, params, off_trace,
                              kv_offload=True)
 
+    # chunked prefill vs whole-prompt on a mixed short/long-prompt trace:
+    # long prompts (up to ~3/4 of max_seq) stall every running decode for
+    # a whole step under whole-prompt prefill; chunked prefill bounds the
+    # per-step prefill work by the token budget and compiles exactly one
+    # executable across every prompt length
+    new_hi = max(2, min(12, args.max_seq // 4))
+    # long prompts up to ~3/4 of max_seq, never inverted for small
+    # --max-seq and always leaving room for the decode budget
+    long_hi = min(max(args.max_seq // 2, args.max_seq - 16),
+                  args.max_seq - new_hi)
+    long_lo = min(args.max_seq // 2, long_hi)
+    # the quantum grid must intersect both ranges (poisson_trace rejects a
+    # range with no on-grid length): shrink the quantum for small max_seq
+    # and align the long range's lower bound down onto the grid
+    q_long = max(1, min(8, min(hi, long_lo)))
+    long_lo = max(q_long, (long_lo // q_long) * q_long)
+    long_trace = poisson_trace(
+        args.requests, rate=args.rate, vocab_size=cfg.vocab_size,
+        prompt_lens=(lo, min(hi, long_lo)), new_tokens=(2, new_hi),
+        prompt_quantum=q_long, long_prompt_lens=(long_lo, long_hi),
+        long_fraction=0.3, seed=args.seed + 4)
+    long_prompts = run_long_prompt_comparison(
+        resident, model, params, long_trace, args.chunk_size,
+        args.prefill_tokens)
+
     speedup = cont["tokens_per_s"] / static["tokens_per_s"]
     summary = {
         "arch": cfg.name, "requests": args.requests, "rate": args.rate,
         "max_batch": args.max_batch, "max_seq": args.max_seq,
         "static": static, "continuous": cont, "kv_offload": offload,
+        "long_prompts": long_prompts,
         # the merged front-door snapshot: pool/transfer counters next to
         # the throughput numbers (tracked in BENCH_serving.json)
         "session": off_session.stats(),
@@ -203,6 +341,15 @@ def main() -> None:
           f"evictions:{offload['pool_evictions']}")
     print(f"serve_continuous,speedup,wall:{speedup:.2f},"
           f"steps:{summary['step_throughput_speedup']:.2f}")
+    wl, ck = long_prompts["whole_prompt"], long_prompts["chunked"]
+    print(f"serve_continuous,long_whole,prefill_stall_max:"
+          f"{wl['max_step_prefill_tokens']},p99_step_ms:"
+          f"{wl['p99_step_wall_ms']:.1f},executables:"
+          f"{wl['prefill_executables']}")
+    print(f"serve_continuous,long_chunked,chunk:{args.chunk_size},"
+          f"prefill_step_max:{ck['max_step_prefill_tokens']},p99_step_ms:"
+          f"{ck['p99_step_wall_ms']:.1f},executables:"
+          f"{ck['prefill_executables']}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(summary, f, indent=2, sort_keys=True)

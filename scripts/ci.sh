@@ -8,7 +8,10 @@ if ! python -c "import jax, numpy, pytest" 2>/dev/null; then
     python -m pip install --quiet -r requirements.txt
 fi
 
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+# full suite including slow-marked end-to-end cases (pytest.ini deselects
+# them by default so the tier-1 gate stays fast)
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q -m "slow or not slow" "$@"
 
 # public-API smoke: the quickstart exercises the OffloadConfig /
 # HyperOffloadSession front door end to end (train + serve + stats)

@@ -85,6 +85,12 @@ class OffloadConfig:
     max_seq: int = 128
     max_batch: int = 4
     prefill_budget: int = 1
+    # chunked prefill (continuous/kv_offload scheduling): chunk_size sets
+    # the tokens prefilled per scheduler step through one fixed compiled
+    # shape; prefill_tokens is the per-step prefill *token* budget across
+    # requests (None → one chunk). None chunk_size = whole-prompt prefill.
+    chunk_size: Optional[int] = None
+    prefill_tokens: Optional[int] = None
     page_size: int = 32
     cache_dtype: str = "float32"
 
@@ -113,6 +119,18 @@ class OffloadConfig:
             raise ValueError(
                 f"transfer_depth must be 'auto' or an int >= 1, "
                 f"got {self.transfer_depth!r}")
+        if self.chunk_size is not None and not (
+                1 <= self.chunk_size <= self.max_seq):
+            raise ValueError(
+                f"chunk_size {self.chunk_size} must be in [1, max_seq="
+                f"{self.max_seq}]")
+        if self.prefill_tokens is not None:
+            if self.chunk_size is None:
+                raise ValueError(
+                    "prefill_tokens (a per-step prefill token budget) "
+                    "requires chunk_size")
+            if self.prefill_tokens < 1:
+                raise ValueError("prefill_tokens must be >= 1")
 
     # ------------------------------------------------------------------
     @property

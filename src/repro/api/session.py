@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.api.config import OffloadConfig
+from repro.core.insertion import PAGED_INSERTION
 from repro.core.ir import Graph
 from repro.core.jax_exec import PlanExecutor
 from repro.core.planner import HyperOffloadPlanner, OffloadPlan
@@ -122,10 +123,18 @@ class HyperOffloadSession:
         if cfg is None:
             base: Dict[str, Any] = dict(
                 max_batch=c.max_batch, max_seq=c.max_seq,
-                prefill_budget=c.prefill_budget, kv_offload=c.offload_kv,
+                prefill_budget=c.prefill_budget, chunk_size=c.chunk_size,
+                prefill_tokens=c.prefill_tokens, kv_offload=c.offload_kv,
                 cache_dtype=c.dtype, hw=c.hardware,
                 insert_opts=c.insertion_options(), refine=c.refine)
             base.update(overrides)
+            if (base["kv_offload"] and c.insertion is None
+                    and "insert_opts" not in overrides):
+                # a kv_offload override on a non-offload-mode session must
+                # still plan the mandatory prefetch of every pool-resident
+                # KV tensor — the resident-mode cost-model thresholds would
+                # silently filter small KV leaves out of the plan
+                base["insert_opts"] = PAGED_INSERTION
             cfg = SchedulerConfig(**base)
         elif overrides:
             raise TypeError("pass either cfg or field overrides, not both")
@@ -196,13 +205,15 @@ class HyperOffloadSession:
             serve["cache_round_trips"] += e.stats.cache_round_trips
 
         sched = {"schedulers": len(self._schedulers), "steps": 0, "joins": 0,
-                 "retires": 0, "prefill_tokens": 0, "decoded_tokens": 0,
+                 "retires": 0, "prefill_tokens": 0, "prefill_chunks": 0,
+                 "decoded_tokens": 0,
                  "pages_parked": 0, "cold_spills": 0, "admission_blocked": 0}
         prefetch = {"steps": 0, "fetches_issued": 0, "layers_planned": 0}
         leads: List[float] = []
         for s in self._schedulers:
             for k in ("steps", "joins", "retires", "prefill_tokens",
-                      "decoded_tokens", "pages_parked", "cold_spills"):
+                      "prefill_chunks", "decoded_tokens", "pages_parked",
+                      "cold_spills"):
                 sched[k] += getattr(s.stats, k)
             sched["admission_blocked"] += s.admission.blocked
             pf = s.prefetch_stats()

@@ -358,6 +358,147 @@ def _ring_write_seq(buf: jax.Array, vals: jax.Array) -> jax.Array:
     return rolled
 
 
+def _ring_write_at(buf: jax.Array, vals: jax.Array, offset: jax.Array,
+                   valid_len: jax.Array) -> jax.Array:
+    """Write a chunk (B,S,...) into a ring buffer (B,C,...) at an arbitrary
+    start position: token ``offset + i`` -> slot ``(offset + i) % C``.
+
+    Only the first ``valid_len`` tokens are real (the rest padding of a
+    final partial chunk) — padded tokens are never written, so slots that
+    still hold live earlier tokens of a windowed layer are not clobbered.
+    When the valid region exceeds C only its last C tokens land (unique
+    slots), matching ``_ring_write_seq``'s keep-the-tail semantics. Both
+    ``offset`` and ``valid_len`` may be traced scalars: dropped writes are
+    routed out of bounds (scatter ``mode="drop"``), so one compiled shape
+    serves every (offset, valid_len)."""
+    c = buf.shape[1]
+    s = vals.shape[1]
+    i = jnp.arange(s)
+    keep = (i < valid_len) & (i >= valid_len - c)
+    slots = jnp.where(keep, jnp.mod(offset + i, c), c)   # c = out of bounds
+    return buf.at[:, slots].set(vals.astype(buf.dtype), mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (chunk attends over [cache ++ chunk] at a position offset)
+# ---------------------------------------------------------------------------
+
+
+def attention_prefill_chunk(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: Dict,
+    x: jax.Array,            # (B, S_chunk, D) — chunk at global offset
+    offset: jax.Array,       # scalar int32: global position of chunk token 0
+    positions: jax.Array,    # (B, S_chunk) or (3, B, S_chunk) rope positions
+    valid_len: jax.Array,    # scalar int32: real tokens in the chunk (rest pad)
+    cache: Dict,
+    *,
+    swa_override: Optional[int] = None,
+) -> Tuple[jax.Array, Dict]:
+    """One prefill chunk against an existing cache: queries attend over
+    ``[cache ++ chunk]`` with per-query causal (and sliding-window) masks at
+    the correct position offset, then the chunk's K/V ring-write into the
+    cache at slots ``(offset + i) % C``.
+
+    The prior-cache segment is read *before* the write, so a windowed layer
+    whose chunk wraps the ring never loses in-window history mid-chunk.
+    Padded tail tokens (``i >= valid_len``) produce garbage rows that the
+    caller discards and are neither attended (causality excludes them for
+    every valid query) nor written. Everything is shape-static except the
+    traced ``offset``/``valid_len`` scalars — one compiled executable per
+    chunk shape."""
+    if spec.mixer == "mla":
+        return _mla_prefill_chunk(cfg, p, x, offset, positions, valid_len,
+                                  cache)
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    c = cache["k"].shape[1]
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    if cfg.rope_mode in ("rope", "mrope"):
+        sections = cfg.mrope_sections if cfg.rope_mode == "mrope" else None
+        q = apply_rope(q, positions, cfg.rope_theta, sections)
+        k = apply_rope(k, positions, cfg.rope_theta, sections)
+    window = spec.window
+    if swa_override is not None and window is None:
+        window = swa_override
+    scale = cfg.query_scale if cfg.query_scale is not None else hd ** -0.5
+
+    # two segments, merged softmax: (a) the prior cache — before the chunk,
+    # ring slot j holds token h_j = (offset-1) - ((offset-1-j) mod C), valid
+    # while h_j >= 0 (and in-window per query); (b) the chunk itself, plain
+    # causal at a shared offset (so the mask is offset-independent).
+    qi = offset + jnp.arange(s)                          # global query pos
+    j = jnp.arange(c)
+    hj = (offset - 1) - jnp.mod(offset - 1 - j, c)       # cached token ids
+    m_hist = jnp.broadcast_to((hj >= 0) & (offset > 0), (s, c))
+    ii = jnp.arange(s)
+    m_chunk = (ii[None, :] <= ii[:, None]) & (ii[None, :] < valid_len)
+    if window is not None:
+        m_hist = m_hist & (hj[None, :] > qi[:, None] - window)
+        m_chunk = m_chunk & (ii[None, :] > ii[:, None] - window)
+    sc_hist = _gqa_scores(q, cache["k"]) * scale         # (B,S,Hq,C)
+    sc_chunk = _gqa_scores(q, k) * scale                 # (B,S,Hq,S)
+    scores = jnp.concatenate([sc_hist, sc_chunk], axis=-1)
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    mask = jnp.concatenate([m_hist, m_chunk], axis=-1)   # (S, C+S)
+    probs = _masked_softmax(scores, mask[None, :, None, :])
+    v_all = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)], axis=1)
+    out = _gqa_out(probs, v_all).astype(x.dtype).reshape(b, s, hq * hd)
+    out = out @ p["wo"]
+
+    new_cache = dict(cache)
+    new_cache["k"] = _ring_write_at(cache["k"], k, offset, valid_len)
+    new_cache["v"] = _ring_write_at(cache["v"], v, offset, valid_len)
+    return out, new_cache
+
+
+def _mla_prefill_chunk(cfg, p, x, offset, positions, valid_len, cache):
+    """MLA chunk prefill: write the chunk's latent KV into the cache, then
+    attend every chunk query over the whole updated cache (the decode path's
+    expand-from-latent, generalized to S queries). Write-then-attend is
+    exact here because MLA caches are full-length (no sliding window), so a
+    chunk never overwrites history a query still needs."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    c = cache["ckv"].shape[1]
+    qlat = rmsnorm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (qlat @ p["wuq"]).reshape(b, s, h, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    ckv_t = rmsnorm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)
+    kr_t = apply_rope((x @ p["wkr"])[:, :, None, :], positions,
+                      cfg.rope_theta)[:, :, 0]
+    new_ckv = _ring_write_at(cache["ckv"], ckv_t, offset, valid_len)
+    new_kr = _ring_write_at(cache["krope"], kr_t, offset, valid_len)
+    kv = (new_ckv @ p["wukv"]).reshape(b, c, h, dn + dv)
+    kn, v = kv[..., :dn], kv[..., dn:]
+    scale = (dn + dr) ** -0.5
+    sc = jnp.einsum("bshd,bthd->bsht", qn.astype(jnp.float32),
+                    kn.astype(jnp.float32))
+    sc += jnp.einsum("bshd,btd->bsht", qr.astype(jnp.float32),
+                     new_kr.astype(jnp.float32))
+    sc *= scale
+    # after the write, ring slot j holds token P - ((P - j) mod C) for the
+    # last written position P; causal: visible iff 0 <= t_j <= query pos
+    last = offset + valid_len - 1
+    tj = last - jnp.mod(last - jnp.arange(c), c)
+    qi = offset + jnp.arange(s)
+    mask = (tj[None, :] >= 0) & (tj[None, :] <= qi[:, None])     # (S, C)
+    sc = jnp.where(mask[None, :, None, :], sc, NEG_INF)
+    probs = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bsht,bthd->bshd", probs, v.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, s, h * dv)
+    out = out @ p["wo"]
+    new_cache = dict(cache)
+    new_cache["ckv"], new_cache["krope"] = new_ckv, new_kr
+    return out, new_cache
+
+
 # ---------------------------------------------------------------------------
 # Decode (single token vs cache)
 # ---------------------------------------------------------------------------

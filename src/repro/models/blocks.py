@@ -160,6 +160,50 @@ def apply_layer_prefill(
     return x, aux, new_cache
 
 
+def apply_layer_prefill_chunk(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    p: Dict,
+    x: jax.Array,            # (B, S_chunk, D)
+    offset: jax.Array,       # scalar: global position of chunk token 0
+    positions: jax.Array,    # (B, S_chunk) or (3, B, S_chunk)
+    valid_len: jax.Array,    # scalar: real tokens in the chunk
+    cache: Dict,
+    *,
+    swa_override: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array, Dict]:
+    """Chunked cache-aware prefill step for one layer: the chunk attends
+    over [cache ++ chunk] at its position offset and the cache advances by
+    the chunk's (valid) K/V. Attention/MLA mixers only — recurrent (mamba2)
+    and cross-attention layers have no per-position cache to resume from
+    (``Model.supports_chunked_prefill`` gates this upstream)."""
+    if spec.mixer == "mamba2" or spec.cross_attn:
+        raise NotImplementedError(
+            "chunked prefill supports attention/MLA self-attention layers "
+            "only (gate on Model.supports_chunked_prefill)")
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["pre_norm"], x)
+    h, new_cache = attn.attention_prefill_chunk(
+        cfg, spec, p["mixer"], h, offset, positions, valid_len, cache,
+        swa_override=swa_override)
+    if spec.post_norms:
+        h = apply_norm(cfg, p["post_norm"], h)
+    x = x + h
+    if spec.ffn != "none":
+        h = apply_norm(cfg, p["ffn_norm"], x)
+        if spec.ffn == "moe":
+            h, aux = moe_mod.moe_ffn(cfg, p["ffn"], h)
+        elif spec.ffn == "gelu":
+            h = mlp_mod.gelu_mlp(p["ffn"], h)
+        else:
+            h = mlp_mod.swiglu(p["ffn"], h)
+        if spec.post_norms:
+            h = apply_norm(cfg, p["post_ffn_norm"], h)
+        x = x + h
+    x = constrain(x, ("batch", "seq_act", "embed_act"))
+    return x, aux, new_cache
+
+
 # ---------------------------------------------------------------------------
 # Decode (single token)
 # ---------------------------------------------------------------------------

@@ -67,6 +67,24 @@ class Model:
             swa_override=self.swa_override,
         )
 
+    def prefill_chunk(self, params: Dict, batch: Dict, offset: jax.Array,
+                      valid_len: jax.Array, cache: Dict) -> Tuple[jax.Array, Dict]:
+        """Cache-aware prefill of one prompt chunk at a global position
+        offset (see ``transformer.prefill_chunk``). Only the first
+        ``valid_len`` tokens of the chunk are real; logits are the last
+        valid token's. Requires ``supports_chunked_prefill``."""
+        return tfm.prefill_chunk(
+            self.cfg, params, batch["tokens"], offset, valid_len, cache,
+            swa_override=self.swa_override)
+
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill resumes from a per-position KV cache; recurrent
+        (mamba2) mixers, cross-attention layers, and encoder frontends have
+        state the chunk path cannot yet carry."""
+        return self.cfg.encoder is None and all(
+            spec.mixer in ("attn", "mla") and not spec.cross_attn
+            for seg in self.cfg.segments for spec in seg.pattern)
+
     def decode_step(self, params: Dict, cache: Dict, token: jax.Array,
                     pos: jax.Array, inplace: bool = True) -> Tuple[jax.Array, Dict]:
         return tfm.decode_step(self.cfg, params, cache, token, pos,

@@ -259,6 +259,58 @@ def prefill(
 
 
 # ---------------------------------------------------------------------------
+# Chunked prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill_chunk(
+    cfg: ModelConfig,
+    params: Dict,
+    tokens: jax.Array,   # (B, S_chunk) int32 — chunk at global offset
+    offset: jax.Array,   # scalar int32: global position of chunk token 0
+    valid_len: jax.Array,  # scalar int32: real tokens (the rest is padding)
+    cache: Dict,
+    *,
+    swa_override: Optional[int] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Cache-aware prefill of one prompt chunk (the serving scheduler's
+    chunked-prefill entry point). Each chunk attends over
+    ``[cache ++ chunk]`` at its global position offset, so prefilling a
+    prompt ``chunk`` tokens at a time produces the same cache a whole-prompt
+    ``prefill`` would. Returns (logits of the last *valid* chunk token
+    (B,1,V), updated cache). Shapes are static except the traced
+    ``offset``/``valid_len`` scalars — mixed prompt lengths share ONE
+    compiled executable per chunk shape."""
+    b, s = tokens.shape
+    positions = offset + jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if cfg.rope_mode == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, b, s))
+    x = embed_tokens(cfg, params, tokens, positions)
+
+    new_cache: Dict[str, Any] = {"segments": []}
+    for seg, seg_params, seg_cache in zip(
+            cfg.segments, params["segments"], cache["segments"]):
+
+        def scan_body(h, xs, seg=seg):
+            layer_params, layer_cache = xs
+            out_cache = {}
+            for i, spec in enumerate(seg.pattern):
+                h, _, c = blocks.apply_layer_prefill_chunk(
+                    cfg, spec, layer_params[f"p{i}"], h, offset, positions,
+                    valid_len, layer_cache[f"p{i}"],
+                    swa_override=swa_override)
+                out_cache[f"p{i}"] = c
+            return h, out_cache
+
+        x, seg_new_cache = jax.lax.scan(scan_body, x, (seg_params, seg_cache))
+        new_cache["segments"].append(seg_new_cache)
+
+    last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
+    logits = final_logits(cfg, params, last)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
 # Decode step
 # ---------------------------------------------------------------------------
 

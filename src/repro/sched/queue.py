@@ -11,7 +11,8 @@ the (slow) remote tier.
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+import bisect
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -33,13 +34,23 @@ class ArrivalQueue:
             self.push(r)
 
     def push(self, request: Request) -> RequestState:
+        """O(log n) search + O(n) insert (``bisect.insort``) instead of
+        re-sorting the whole queue per submit — submitting a trace of n
+        requests is O(n^2) worst case, not O(n^2 log n) with a full sort's
+        constant factors on every push."""
         state = RequestState(request=request)
-        self._q.append(state)
-        self._q.sort(key=lambda s: (s.request.arrival, s.req_id))
+        bisect.insort(self._q, state,
+                      key=lambda s: (s.request.arrival, s.req_id))
         return state
 
     def __len__(self) -> int:
         return len(self._q)
+
+    def pending(self) -> Tuple[RequestState, ...]:
+        """Snapshot of the queued states in arrival order — the public
+        read the scheduler's progress bound uses (callers must not reach
+        into the private list)."""
+        return tuple(self._q)
 
     def head_ready(self, now: float) -> Optional[RequestState]:
         """The next request whose arrival time has passed (FIFO), without
@@ -98,20 +109,50 @@ def poisson_trace(n_requests: int, *, rate: float, vocab_size: int,
                   prompt_lens: Sequence[int] = (4, 24),
                   new_tokens: Sequence[int] = (2, 16),
                   prompt_quantum: int = 1,
+                  long_prompt_lens: Optional[Sequence[int]] = None,
+                  long_fraction: float = 0.0,
                   seed: int = 0) -> List[Request]:
     """Deterministic mixed-length Poisson arrival trace (benchmarks/tests):
     exponential inter-arrival gaps at ``rate`` requests per unit of
     scheduler time, uniform prompt/decode lengths in the given ranges.
-    ``prompt_quantum`` rounds prompt lengths down to bucket multiples —
-    bucketed serving keeps the set of prefill shapes (→ compiled
-    executables) small."""
+
+    ``prompt_quantum`` rounds every sampled prompt length **up** onto the
+    quantum grid, clamped to the grid point at or below ``hi`` so a
+    rounded length never exceeds an off-grid upper bound (a caller sizing
+    ``hi`` against ``max_seq`` must not receive longer prompts than asked
+    for): emitted lengths are multiples of ``prompt_quantum`` in
+    ``[ceil(lo/q)*q, floor(hi/q)*q]``. A quantum larger than a range's
+    upper bound has no on-grid length to emit and raises. (Rounding *down*
+    with a ``max(lo, …)`` clamp — the old behavior — emitted the off-grid
+    ``lo`` whenever ``lo`` was not a multiple, silently growing the set of
+    prefill shapes bucketed serving has to compile.)
+
+    ``long_prompt_lens`` + ``long_fraction`` mix a heavy tail of long
+    prompts into the trace (same quantum grid): each request draws its
+    length from ``long_prompt_lens`` with probability ``long_fraction`` —
+    the stall-inducing traffic the chunked-prefill benchmark measures
+    p99 step latency under. When ``long_prompt_lens`` is None the RNG
+    call sequence is unchanged, so existing seeded traces stay
+    byte-identical."""
+    q = prompt_quantum
+    for rng_name, rng_range in (("prompt_lens", prompt_lens),
+                                ("long_prompt_lens", long_prompt_lens)):
+        if rng_range is not None and (rng_range[1] // q) * q < rng_range[0]:
+            raise ValueError(
+                f"prompt_quantum {q} has no multiple inside {rng_name} "
+                f"range {tuple(rng_range)}: no on-grid length can be "
+                "emitted without violating a bound")
     rng = np.random.default_rng(seed)
     t = 0.0
     out: List[Request] = []
     for i in range(n_requests):
         t += float(rng.exponential(1.0 / rate))
-        s = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
-        s = max(prompt_lens[0], (s // prompt_quantum) * prompt_quantum)
+        lo, hi = prompt_lens
+        if long_prompt_lens is not None and rng.random() < long_fraction:
+            lo, hi = long_prompt_lens
+        s = int(rng.integers(lo, hi + 1))
+        # round UP onto the quantum grid, but never past hi's grid floor
+        s = min(-(-s // q) * q, (hi // q) * q)
         m = int(rng.integers(new_tokens[0], new_tokens[1] + 1))
         toks = rng.integers(0, vocab_size, size=s, dtype=np.int32)
         out.append(Request(tokens=toks, max_new_tokens=m, arrival=t, seed=i))

@@ -6,7 +6,12 @@ through QUEUED → PREFILL → DECODE → DONE:
 
 - QUEUED   — waiting in the arrival queue (not yet admitted: no slot, no
              capacity reservation);
-- PREFILL  — admitted this step: prompt being prefilled into its batch slot;
+- PREFILL  — admitted: prompt being prefilled into its batch slot. With
+             chunked prefill (``SchedulerConfig.chunk_size``) this state
+             persists across scheduler steps — ``prefill_pos`` tracks how
+             many prompt tokens have landed, and the partial batch-1 row
+             cache lives on ``chunk_cache`` between steps (resident mode)
+             or parked page-by-page in the memory pool (kv_offload mode);
 - DECODE   — joined the running batch; one token per scheduler step;
 - DONE     — produced ``max_new_tokens``; slot freed, reservation released,
              pages dropped.
@@ -25,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import List, Optional
+from typing import Any, List, Optional
 
 import jax
 import numpy as np
@@ -77,6 +82,8 @@ class RequestState:
     status: str = QUEUED
     slot: Optional[int] = None         # batch row while admitted
     pos: int = 0                       # next cache write index for decode
+    prefill_pos: int = 0               # prompt tokens prefilled so far (chunked)
+    chunk_cache: Optional[Any] = None  # partial row cache between chunk steps
     last_tok: int = -1                 # token fed to the next decode step
     out: List[int] = dataclasses.field(default_factory=list)
     key: Optional[jax.Array] = None    # per-request sampling key stream

@@ -12,6 +12,19 @@ requests; each step the scheduler
    pages (``AdmissionController``); admitted prompts are prefilled
    (batch-1) and scattered into their slot, and their first token sampled
    from the prefill logits exactly as ``ServeEngine.generate`` does;
+
+   with **chunked prefill** (``chunk_size`` set) prompts instead advance
+   ``chunk_size`` tokens per scheduler step through one fixed-shape
+   ``jit_prefill_chunk`` executable (final partial chunks padded and
+   masked): the PREFILL state persists across steps, the per-step budget
+   is ``prefill_tokens`` *tokens* (default: one chunk) rather than a
+   whole-prompt count, and the first token is sampled only when the last
+   chunk lands — a long prompt can no longer stall every running decode
+   for its full prefill, and mixed-length traffic compiles exactly one
+   prefill executable instead of one per distinct prompt length. Between
+   chunk steps the partial batch-1 row cache stays on the request state
+   (resident) or is parked page-by-page through the pool (``kv_offload``),
+   under the same ``L{i}.{j}`` labels the decode loop parks under;
 3. decodes all running requests in ONE batched ``decode_step`` with
    per-row positions (rows are independent, so each row's tokens equal the
    per-request run), samples per request from its own seed-derived key
@@ -53,7 +66,7 @@ from repro.pool.manager import PoolEntry
 from repro.sched.prefetch import InFlightFetches, PlanPrefetcher
 from repro.sched.queue import AdmissionController, ArrivalQueue
 from repro.sched.requests import DECODE, DONE, PREFILL, Request, RequestState
-from repro.serving.engine import jit_decode, jit_prefill
+from repro.serving.engine import jit_decode, jit_prefill, jit_prefill_chunk
 from repro.serving.sampling import sample_token
 
 _SCHED_IDS = itertools.count()
@@ -64,6 +77,14 @@ class SchedulerConfig:
     max_batch: int = 4            # cache slots (concurrent requests)
     max_seq: int = 128            # per-slot cache capacity
     prefill_budget: int = 1       # prompts prefilled (joined) per step
+    # chunked prefill: when chunk_size is set, prompts advance chunk_size
+    # tokens per scheduler step (one fixed compiled shape; final partial
+    # chunks padded+masked) and prefill_tokens is the per-step *token*
+    # budget across requests (None → one chunk per step). prefill_budget
+    # is ignored in chunked mode; None chunk_size keeps the legacy
+    # whole-prompt path.
+    chunk_size: Optional[int] = None
+    prefill_tokens: Optional[int] = None
     kv_offload: bool = False      # pages live in the pool between steps
     cache_dtype: Any = jnp.float32
     hw: HardwareSpec = TPU_V5E    # cost model driving the prefetch plan
@@ -80,6 +101,7 @@ class SchedStats:
     joins: int = 0
     retires: int = 0
     prefill_tokens: int = 0
+    prefill_chunks: int = 0       # jit_prefill_chunk calls (chunked mode)
     decoded_tokens: int = 0
     pages_parked: int = 0
     cold_spills: int = 0          # our pages spilled down-tier by the manager
@@ -97,6 +119,24 @@ class ContinuousScheduler:
         self.stats = SchedStats()
         self.finished: Dict[int, RequestState] = {}
 
+        if cfg.chunk_size is not None:
+            if not 1 <= cfg.chunk_size <= cfg.max_seq:
+                raise ValueError(
+                    f"chunk_size {cfg.chunk_size} must be in [1, max_seq="
+                    f"{cfg.max_seq}]")
+            if not model.supports_chunked_prefill():
+                raise ValueError(
+                    f"model {model.cfg.name!r} has recurrent or cross-"
+                    "attention layers; chunked prefill supports attention/"
+                    "MLA self-attention models only (leave chunk_size "
+                    "unset for whole-prompt prefill)")
+            self._chunk_prefill = jit_prefill_chunk(model)
+        if cfg.prefill_tokens is not None:
+            if cfg.chunk_size is None:
+                raise ValueError("prefill_tokens (a per-step token budget) "
+                                 "requires chunk_size")
+            if cfg.prefill_tokens < 1:
+                raise ValueError("prefill_tokens must be >= 1")
         self._prefill = jit_prefill(model)
         self._decode = jit_decode(model)
         self.cache = model.init_cache(cfg.max_batch, cfg.max_seq,
@@ -209,44 +249,187 @@ class ContinuousScheduler:
             self.cache["segments"][si][f"p{pi}"] = jax.tree.unflatten(
                 treedef, leaves)
 
+    def _try_admit_head(self) -> Optional[Tuple[RequestState, int]]:
+        """Admission guard shared by both prefill paths: pop the arrival
+        queue's head into a free slot if the pool can hold its worst-case
+        pages. Returns (state, slot) or None (no slot / not arrived /
+        capacity pressure)."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return None
+        state = self.queue.head_ready(self.now)
+        if state is None:
+            return None
+        # the request's page-key prefix ("-" guards req3 vs req30)
+        covers = f"{self._ns}/req{state.req_id}-"
+        if not self.admission.try_admit(state, self._row_bytes, covers):
+            if not self.active and not self.admission.can_ever_admit(
+                    self._row_bytes):
+                raise RuntimeError(
+                    f"request {state.req_id} can never be admitted: "
+                    f"worst-case pages ({self._row_bytes} B) exceed the "
+                    "pool's device+host capacity")
+            return None   # capacity pressure — retirements will free it
+        self.queue.pop()
+        return state, free[0]
+
     def _admit_and_prefill(self) -> List[Tuple[int, int]]:
+        if self.cfg.chunk_size is not None:
+            return self._admit_and_prefill_chunked()
         emitted: List[Tuple[int, int]] = []
         for _ in range(self.cfg.prefill_budget):
-            free = [i for i, s in enumerate(self.slots) if s is None]
-            if not free:
+            admitted = self._try_admit_head()
+            if admitted is None:
                 break
-            state = self.queue.head_ready(self.now)
-            if state is None:
-                break
-            # the request's page-key prefix ("-" guards req3 vs req30)
-            covers = f"{self._ns}/req{state.req_id}-"
-            if not self.admission.try_admit(state, self._row_bytes, covers):
-                if not self.active and not self.admission.can_ever_admit(
-                        self._row_bytes):
-                    raise RuntimeError(
-                        f"request {state.req_id} can never be admitted: "
-                        f"worst-case pages ({self._row_bytes} B) exceed the "
-                        "pool's device+host capacity")
-                break   # capacity pressure — retirements will free it
-            self.queue.pop()
-            emitted.append(self._join(state, free[0]))
+            emitted.append(self._join(*admitted))
         return emitted
 
-    def _join(self, state: RequestState, slot: int) -> Tuple[int, int]:
+    def _admit_and_prefill_chunked(self) -> List[Tuple[int, int]]:
+        """Chunked admission/prefill: spend up to ``prefill_tokens`` chunk
+        tokens this step — first advancing requests already mid-PREFILL
+        (oldest join first, so prompts finish in admission order), then
+        admitting new ones while budget remains. Each ``jit_prefill_chunk``
+        call charges a full ``chunk_size`` against the budget (a padded
+        final chunk costs the same compute as a full one); the first chunk
+        of a step always runs even if the budget is smaller than one chunk,
+        so the loop can't stall."""
+        emitted: List[Tuple[int, int]] = []
+        budget = self.cfg.prefill_tokens or self.cfg.chunk_size
+        spent = 0
+        mid = [s for s in self.slots
+               if s is not None and s.status == PREFILL]
+        for s in sorted(mid, key=lambda s: (s.joined_step, s.req_id)):
+            out, spent = self._advance_chunks(s, spent, budget)
+            emitted += out
+        while spent < budget:
+            admitted = self._try_admit_head()
+            if admitted is None:
+                break
+            state, slot = admitted
+            self._join_chunked(state, slot)
+            out, spent = self._advance_chunks(state, spent, budget)
+            emitted += out
+        return emitted
+
+    def _advance_chunks(self, state: RequestState, spent: int,
+                        budget: int) -> Tuple[List[Tuple[int, int]], int]:
+        """Advance one request as far as the step's token budget allows,
+        holding its row cache resident across consecutive chunks — the row
+        parks (once) only when the budget moves on with the prompt still
+        unfinished, not once per chunk."""
+        emitted: List[Tuple[int, int]] = []
+        row = None
+        while state.status == PREFILL and spent < budget:
+            if row is None:
+                row = self._restore_chunk_row(state)
+            out, row = self._prefill_chunk_step(state, row)
+            emitted += out
+            spent += self.cfg.chunk_size
+        if row is not None:
+            self._park_chunk_row(state, row)
+        return emitted, spent
+
+    def _join_chunked(self, state: RequestState, slot: int) -> None:
+        """Take the slot and the capacity reservation; prefill advances in
+        ``_prefill_chunk_step`` calls from here on."""
+        self._take_slot(state, slot)
+        state.prefill_pos = 0
+        state.chunk_cache = self.model.init_cache(1, self.cfg.max_seq,
+                                                  self.cfg.cache_dtype)
+
+    def _prefill_chunk_step(
+            self, state: RequestState,
+            row: Any) -> Tuple[List[Tuple[int, int]], Optional[Any]]:
+        """Advance one request by one chunk against its row cache. Returns
+        (emitted, row): the advanced row while the prompt is unfinished
+        (the caller keeps it resident or parks it), or None once the final
+        chunk lands — then the row is scattered into the batch slot and the
+        first token sampled from the last valid token's logits, exactly as
+        whole-prompt ``_join`` does, so token identity is preserved."""
         req = state.request
+        chunk = self.cfg.chunk_size
+        start = state.prefill_pos
+        end = min(start + chunk, req.prompt_len)
+        valid = end - start
+        toks = np.zeros((1, chunk), np.int32)
+        toks[0, :valid] = req.tokens[start:end]
+        logits, row = self._chunk_prefill(
+            self.params, {"tokens": jnp.asarray(toks)},
+            jnp.int32(start), jnp.int32(valid), row)
+        state.prefill_pos = end
+        state.last_step = self.stats.steps
+        self.stats.prefill_tokens += valid
+        self.stats.prefill_chunks += 1
+        if end < req.prompt_len:
+            return [], row
+        # last chunk landed — shared completion with the whole-prompt path
+        state.chunk_cache = None
+        return [self._finish_prefill(state, logits, row)], None
+
+    def _park_chunk_row(self, state: RequestState, row: Any) -> None:
+        """Between chunk steps the partial row cache stays on the state
+        (resident) or is parked page-by-page through the pool (kv_offload)
+        — same ``L{i}.{j}`` labels the decode loop parks under, so once
+        decoding starts the entries are replaced in place. Priority =
+        remaining work (all decode steps plus unprefilled prompt tokens):
+        mid-prefill rows are the hottest pages in the pool."""
+        if not self.cfg.kv_offload:
+            state.chunk_cache = row
+            return
+        prio = float(state.request.max_new_tokens
+                     + state.request.prompt_len - state.prefill_pos)
+        for i, (si, ri, pi) in enumerate(self._flat):
+            leaves = jax.tree.leaves(row["segments"][si][f"p{pi}"])
+            for j, leaf in enumerate(leaves):
+                state.pages.park(f"L{i}.{j}", leaf[ri, 0], DEVICE_TIER,
+                                 priority=prio)
+                self.stats.pages_parked += 1
+        state.chunk_cache = None
+
+    def _restore_chunk_row(self, state: RequestState) -> Any:
+        """Inverse of ``_park_chunk_row``: the resident row is handed back
+        directly (and detached — jit donates it); a parked row is fetched
+        page-by-page from wherever the pool's eviction left it."""
+        if state.chunk_cache is not None:
+            row, state.chunk_cache = state.chunk_cache, None
+            return row
+        row = self.model.init_cache(1, self.cfg.max_seq, self.cfg.cache_dtype)
+        for i, (si, ri, pi) in enumerate(self._flat):
+            leaves, treedef = jax.tree.flatten(row["segments"][si][f"p{pi}"])
+            for j in range(len(leaves)):
+                # fetched pages are committed to their tier's device; strip
+                # the commitment so restored rows share the (uncommitted)
+                # jit signature of fresh/resident rows — one compiled chunk
+                # executable per chunk shape, not one per residency path
+                leaves[j] = leaves[j].at[ri, 0].set(
+                    np.asarray(state.pages.fetch(f"L{i}.{j}")))
+            row["segments"][si][f"p{pi}"] = jax.tree.unflatten(treedef, leaves)
+        return row
+
+    def _take_slot(self, state: RequestState, slot: int) -> None:
+        """Join bookkeeping shared by both prefill paths: occupy the batch
+        slot and (kv_offload) create the request's page table."""
         state.status = PREFILL
         state.slot = slot
         self.slots[slot] = state
         state.joined_step = self.stats.steps
         if self.cfg.kv_offload:   # resident mode never parks a page
-            state.pages = KVPageTable(self.pool, f"{self._ns}/req{req.req_id}")
-        row = self.model.init_cache(1, self.cfg.max_seq, self.cfg.cache_dtype)
-        logits, row = self._prefill(
-            self.params, {"tokens": jnp.asarray(req.tokens[None, :])}, row)
-        self.stats.prefill_tokens += req.prompt_len
-        # scatter the prefilled row into the batch slot
-        self.cache = jax.tree.map(lambda big, r: big.at[:, slot].set(r[:, 0]),
-                                  self.cache, row)
+            state.pages = KVPageTable(
+                self.pool, f"{self._ns}/req{state.req_id}")
+        self.stats.joins += 1
+
+    def _finish_prefill(self, state: RequestState, logits: jax.Array,
+                        row: Any) -> Tuple[int, int]:
+        """Prompt fully prefilled (whole prompt, or the final chunk):
+        scatter the batch-1 row into the slot and sample the first token
+        from the last prompt token's logits, exactly as
+        ``ServeEngine.generate`` does — ONE shared implementation, so the
+        whole-prompt and chunked paths cannot drift apart on the token-
+        identity-critical sampling and state transition."""
+        req = state.request
+        self.cache = jax.tree.map(
+            lambda big, r: big.at[:, state.slot].set(r[:, 0]),
+            self.cache, row)
         key = state.sample_key() if req.temperature > 0.0 else None
         tok = int(sample_token(logits[:, 0], key,
                                temperature=req.temperature,
@@ -257,10 +440,18 @@ class ContinuousScheduler:
         state.t_first_token = self.now
         state.status = DECODE
         state.last_step = self.stats.steps
-        self.stats.joins += 1
         if state.done:                # max_new_tokens == 1
             self._retire(state)
         return (req.req_id, tok)
+
+    def _join(self, state: RequestState, slot: int) -> Tuple[int, int]:
+        req = state.request
+        self._take_slot(state, slot)
+        row = self.model.init_cache(1, self.cfg.max_seq, self.cfg.cache_dtype)
+        logits, row = self._prefill(
+            self.params, {"tokens": jnp.asarray(req.tokens[None, :])}, row)
+        self.stats.prefill_tokens += req.prompt_len
+        return self._finish_prefill(state, logits, row)
 
     def _decode_active(self) -> List[Tuple[int, int]]:
         live = [s for s in self.slots if s is not None and s.status == DECODE]
@@ -352,6 +543,21 @@ class ContinuousScheduler:
         self.now += 1.0
         return emitted
 
+    def default_max_steps(self) -> int:
+        """No-progress bound over everything queued + running: per request
+        its decode budget, plus every prefill chunk still outstanding
+        (chunked mode can spend whole steps advancing one prompt
+        ``chunk_size`` tokens at a time). Shared by ``run`` and external
+        drivers (the serving benchmark) so the formula cannot drift."""
+        def _steps_for(s: RequestState) -> int:
+            n = s.request.max_new_tokens + 1
+            if self.cfg.chunk_size is not None:
+                rem = max(s.request.prompt_len - s.prefill_pos, 0)
+                n += -(-rem // self.cfg.chunk_size)   # ceil
+            return n
+        return 16 + 2 * sum(
+            _steps_for(s) for s in list(self.queue.pending()) + self.active)
+
     def run(self, requests: Sequence[Request] = (), *,
             max_steps: Optional[int] = None) -> Dict[int, np.ndarray]:
         """Drive the loop until every submitted request completes. Returns
@@ -359,9 +565,7 @@ class ContinuousScheduler:
         for r in requests:
             self.submit(r)
         if max_steps is None:
-            max_steps = 16 + 2 * sum(
-                s.request.max_new_tokens + 1
-                for s in list(self.queue._q) + self.active)
+            max_steps = self.default_max_steps()
         steps = 0
         while len(self.queue) or self.active:
             if not self.active and self.queue.head_ready(self.now) is None:

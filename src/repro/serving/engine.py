@@ -58,6 +58,19 @@ def jit_decode(model: Model):
     return jax.jit(model.decode_step, donate_argnums=(1,))
 
 
+@functools.lru_cache(maxsize=64)
+def jit_prefill_chunk(model: Model):
+    """Chunked-prefill entry point (`Model.prefill_chunk`): the chunk's
+    token shape is fixed at (1, chunk_size) and the position offset /
+    valid length are traced scalars, so mixed-length traffic compiles
+    exactly ONE executable per chunk size — the structural fix for the
+    per-prompt-length compile churn of whole-prompt prefill. The row cache
+    is donated: chunk i+1 reuses chunk i's buffers. Compile count is
+    observable via ``jit_prefill_chunk(model)._cache_size()`` (asserted by
+    the serving benchmark)."""
+    return jax.jit(model.prefill_chunk, donate_argnums=(4,))
+
+
 class ServeEngine:
     def __init__(self, model: Model, params: Any, *, max_seq: int,
                  cache_dtype=jnp.float32, offload_kv: bool = False,

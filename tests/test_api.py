@@ -55,6 +55,7 @@ def test_config_round_trips_through_json():
         host_capacity=1 << 22,
         transfer_depth=16,
         max_seq=64, max_batch=2, prefill_budget=2,
+        chunk_size=16, prefill_tokens=32,
         cache_dtype="bfloat16",
         insertion=InsertionOptions(min_bytes=4096,
                                    force_prefixes=("kv_",)),
@@ -85,6 +86,12 @@ def test_config_validates_fields():
         OffloadConfig(hw="abacus")
     with pytest.raises(ValueError, match="transfer_depth"):
         OffloadConfig(transfer_depth=0)
+    with pytest.raises(ValueError, match="chunk_size"):
+        OffloadConfig(chunk_size=0)
+    with pytest.raises(ValueError, match="chunk_size"):
+        OffloadConfig(chunk_size=256, max_seq=128)
+    with pytest.raises(ValueError, match="requires chunk_size"):
+        OffloadConfig(prefill_tokens=16)
     with pytest.raises(ValueError, match="unknown OffloadConfig fields"):
         OffloadConfig.from_dict({"modee": "resident"})
     # a typo inside a nested options dict must not silently default
@@ -108,6 +115,21 @@ def test_mode_resolves_planner_and_depth_defaults():
     assert auto.depth_for(pages=40) == 80
     assert auto.depth_for() == 8                       # floor
     assert OffloadConfig(transfer_depth=3).depth_for(pages=1000) == 3
+
+
+def test_kv_offload_override_keeps_mandatory_prefetch_planning(
+        model_and_params):
+    """session.scheduler(kv_offload=True) on a resident-mode session must
+    still plan the mandatory prefetch of every pool-resident KV tensor —
+    the resident cost-model thresholds would filter smoke-scale KV leaves
+    out of the plan and the prefetcher would never issue a fetch."""
+    model, params = model_and_params
+    session = HyperOffloadSession(OffloadConfig(max_seq=32, max_batch=2))
+    sched = session.scheduler(model, params, kv_offload=True)
+    assert sched.cfg.insert_opts == PAGED_INSERTION
+    assert sched.prefetcher is not None
+    assert len(sched.prefetcher.planned_layers) > 0
+    session.close()
 
 
 def test_print_config_cli(capsys):

@@ -65,7 +65,9 @@ def test_serving_offload_kv_equals_resident():
     data = SyntheticTokens(CFG.vocab_size, seq_len=16, global_batch=4)
     prompt = {"tokens": data.batch(0)["tokens"]}
     res = ServeEngine(m, params, max_seq=32).generate(prompt, 8)
-    off_engine = ServeEngine(m, params, max_seq=32, offload_kv=True)
+    # intentionally exercises the one-release deprecation shim (private pool)
+    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
+        off_engine = ServeEngine(m, params, max_seq=32, offload_kv=True)
     off = off_engine.generate(prompt, 8)
     np.testing.assert_array_equal(np.asarray(res), np.asarray(off))
     assert off_engine.stats.cache_round_trips == 7
@@ -85,8 +87,10 @@ def test_paged_kvcache_all_pages_exact():
     """Selecting all pages must reproduce dense ring attention exactly."""
     b, hq, hkv, d, page = 2, 4, 2, 32, 8
     max_seq = 64
-    cache = PagedKVCache.create(batch=b, max_seq=max_seq, page_size=page,
-                                n_kv_heads=hkv, head_dim=d)
+    # intentionally exercises the one-release deprecation shim (private pool)
+    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
+        cache = PagedKVCache.create(batch=b, max_seq=max_seq, page_size=page,
+                                    n_kv_heads=hkv, head_dim=d)
     ks = jax.random.split(jax.random.key(0), 3)
     s0 = 29   # 3 full pages + tail of 5
     k_seq = jax.random.normal(ks[0], (b, s0, hkv, d))
@@ -108,8 +112,10 @@ def test_paged_kvcache_all_pages_exact():
 
 def test_paged_kvcache_append_flush_and_sparse_selection():
     b, hq, hkv, d, page = 1, 2, 1, 16, 4
-    cache = PagedKVCache.create(batch=b, max_seq=32, page_size=page,
-                                n_kv_heads=hkv, head_dim=d)
+    # intentionally exercises the one-release deprecation shim (private pool)
+    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
+        cache = PagedKVCache.create(batch=b, max_seq=32, page_size=page,
+                                    n_kv_heads=hkv, head_dim=d)
     ks = jax.random.split(jax.random.key(1), 64)
     for t in range(10):
         cache.append(jax.random.normal(ks[2 * t], (b, hkv, d)),

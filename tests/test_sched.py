@@ -17,9 +17,10 @@ from repro.models.model import build_model
 from repro.offload.kvcache import worst_case_page_bytes
 from repro.pool import DEVICE_TIER, HOST_TIER, TransferEngine, default_pool
 from repro.sched import (
-    ContinuousScheduler, Request, SchedulerConfig, poisson_trace,
+    ArrivalQueue, ContinuousScheduler, Request, SchedulerConfig,
+    poisson_trace,
 )
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import ServeEngine, jit_prefill_chunk
 
 CFG = REGISTRY["phi3-mini-3.8b"].reduced()
 MAX_SEQ = 32
@@ -99,9 +100,11 @@ def test_prefetcher_issues_ahead_of_consumption(model_and_params):
     runtime most waits find the transfer already complete — the
     store-then-immediately-wait round trip is gone from the decode loop."""
     model, params = model_and_params
-    sched = ContinuousScheduler(
-        model, params,
-        SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, kv_offload=True))
+    # intentionally exercises the one-release deprecation shim (private pool)
+    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
+        sched = ContinuousScheduler(
+            model, params,
+            SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, kv_offload=True))
     sched.run(_mixed_trace())
     pf = sched.prefetch_stats()
     assert pf["fetches_issued"] > 0
@@ -129,6 +132,248 @@ def test_temperature_sampling_matches_batch1_engine(model_and_params):
     for r in reqs:
         np.testing.assert_array_equal(out[r.req_id], ref[r.req_id])
     sched.close()
+
+
+# ---------------------------------------------------------------------------
+# chunked cache-aware prefill
+# ---------------------------------------------------------------------------
+
+
+def _long_trace():
+    """Short and long prompts interleaved on a 2-slot batch: long prompts
+    span several chunks, so PREFILL persists across steps while other
+    requests join, decode, and retire around it."""
+    rng = np.random.default_rng(1)
+    shapes = [(5, 6, 0.0), (20, 3, 0.0), (9, 4, 2.0), (23, 2, 4.0),
+              (4, 5, 4.0)]
+    return [Request(tokens=rng.integers(0, CFG.vocab_size, size=s,
+                                        dtype=np.int32),
+                    max_new_tokens=n, arrival=a, seed=i)
+            for i, (s, n, a) in enumerate(shapes)]
+
+
+def _chunked_identity(model, params, chunk, **cfg_kw):
+    reqs = _long_trace()
+    sched = ContinuousScheduler(
+        model, params,
+        SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, chunk_size=chunk,
+                        **cfg_kw))
+    out = sched.run(reqs)
+    ref = _sequential_reference(model, params, reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.req_id], ref[r.req_id])
+    return sched
+
+
+def test_chunked_prefill_matches_whole_prompt(model_and_params):
+    """chunk_size=4: every prompt spans multiple chunks; outputs must be
+    token-identical to sequential whole-prompt serving across joins and
+    retires."""
+    model, params = model_and_params
+    sched = _chunked_identity(model, params, 4)
+    # long prompts really advanced chunk-by-chunk across steps
+    assert sched.stats.prefill_chunks > sched.stats.joins
+    assert sched.stats.prefill_tokens == sum(
+        st.request.prompt_len for st in sched.finished.values())
+    sched.close()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("chunk", [16, MAX_SEQ])
+def test_chunked_prefill_matches_whole_prompt_coarse(model_and_params, chunk):
+    """Coarser chunks (including chunk_size == max_seq, the whole-prompt-
+    in-one-chunk degenerate case) stay token-identical."""
+    model, params = model_and_params
+    _chunked_identity(model, params, chunk).close()
+
+
+@pytest.mark.slow
+def test_chunked_prefill_kv_offload_identity(model_and_params):
+    """Chunked prefill under kv_offload with a tight device tier: partial
+    chunk rows park/restore through the pool between steps, cold pages
+    spill to host, and outputs stay token-identical."""
+    model, params = model_and_params
+    reqs = _long_trace()
+    row = worst_case_page_bytes(model.cache_specs(1, MAX_SEQ, jnp.float32))
+    pool = default_pool(device_capacity=int(1.5 * row),
+                        host_capacity=4 * row,
+                        transfer=TransferEngine(depth=64))
+    # prefill_tokens=8 > chunk_size exercises multi-chunk advancement per
+    # step (row held resident across chunks, parked once per step)
+    sched = ContinuousScheduler(
+        model, params,
+        SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, chunk_size=4,
+                        prefill_tokens=8, kv_offload=True),
+        pool=pool)
+    out = sched.run(reqs)
+    ref = _sequential_reference(model, params, reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.req_id], ref[r.req_id])
+    # mid-prefill rows really were parked page-by-page (pages_parked counts
+    # both prefill parks and decode parks; chunks > joins ⇒ prefill parked)
+    assert sched.stats.prefill_chunks > sched.stats.joins
+    snap = sched.pool_stats()
+    assert snap["evictions"] > 0
+    assert snap["tier/remote"]["entries"] == 0       # admission held
+    sched.close()
+    pool.close()
+
+
+def test_chunked_prefill_compiles_once(model_and_params):
+    """Mixed prompt lengths through one chunk shape compile exactly ONE
+    prefill executable — the structural fix for whole-prompt prefill's
+    per-length compile churn. (chunk_size=8 is used by no other test, so
+    the jit cache delta is exactly this test's compiles.)"""
+    model, params = model_and_params
+    fn = jit_prefill_chunk(model)
+    if not hasattr(fn, "_cache_size"):
+        pytest.skip("jax jit cache-size introspection unavailable")
+    before = fn._cache_size()
+    rng = np.random.default_rng(2)
+    reqs = [Request(tokens=rng.integers(0, CFG.vocab_size, size=s,
+                                        dtype=np.int32),
+                    max_new_tokens=2, seed=i)
+            for i, s in enumerate((5, 9, 14, 23, 26))]   # 5 distinct lengths
+    sched = ContinuousScheduler(
+        model, params,
+        SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, chunk_size=8))
+    sched.run(reqs)
+    assert fn._cache_size() - before == 1
+    sched.close()
+
+
+def test_chunked_prefill_token_budget_bounds_step(model_and_params):
+    """prefill_tokens is a per-step token budget: with the default (one
+    chunk) no step advances prefill by more than chunk_size tokens, even
+    when a long prompt is waiting — the whole-prompt stall is gone."""
+    model, params = model_and_params
+    reqs = _long_trace()
+    sched = ContinuousScheduler(
+        model, params,
+        SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, chunk_size=4))
+    for r in reqs:
+        sched.submit(r)
+    max_step_prefill = 0
+    while len(sched.queue) or sched.active:
+        if not sched.active and sched.queue.head_ready(sched.now) is None:
+            sched.now = max(sched.now, sched.queue.next_arrival())
+        before = sched.stats.prefill_tokens
+        sched.step()
+        max_step_prefill = max(max_step_prefill,
+                               sched.stats.prefill_tokens - before)
+    assert 0 < max_step_prefill <= 4
+    # a doubled budget admits two chunks per step
+    sched2 = ContinuousScheduler(
+        model, params,
+        SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, chunk_size=4,
+                        prefill_tokens=8))
+    sched2.run(_long_trace())
+    assert sched2.stats.steps < sched.stats.steps
+    sched.close()
+    sched2.close()
+
+
+def test_chunked_long_prompts_do_not_trip_progress_guard(model_and_params):
+    """Many long prompts at one chunk per step exceed the old
+    decode-budget-only max_steps bound; the chunk-aware bound (ceil(prompt
+    / chunk) extra steps per request) must let them complete."""
+    model, params = model_and_params
+    toks = np.ones((28,), np.int32)
+    reqs = [Request(tokens=toks, max_new_tokens=1, seed=i) for i in range(8)]
+    sched = ContinuousScheduler(
+        model, params,
+        SchedulerConfig(max_batch=1, max_seq=MAX_SEQ, chunk_size=4))
+    out = sched.run(reqs)                     # default max_steps — no raise
+    assert len(out) == len(reqs)
+    # 8 requests x ceil(28/4)=7 chunk steps alone exceed the old bound of
+    # 16 + 2*sum(max_new+1) = 48
+    assert sched.stats.steps > 48
+    sched.close()
+
+
+def test_chunked_prefill_rejects_unsupported_models(model_and_params):
+    model, params = model_and_params
+    ssm_cfg = REGISTRY["mamba2-370m"].reduced()
+    ssm = build_model(ssm_cfg)
+    ssm_params = ssm.init(jax.random.key(0))
+    with pytest.raises(ValueError, match="chunked prefill"):
+        ContinuousScheduler(
+            ssm, ssm_params,
+            SchedulerConfig(max_batch=1, max_seq=MAX_SEQ, chunk_size=4))
+    with pytest.raises(ValueError, match="chunk_size"):
+        ContinuousScheduler(
+            model, params,
+            SchedulerConfig(max_batch=1, max_seq=MAX_SEQ,
+                            chunk_size=MAX_SEQ + 1))
+    with pytest.raises(ValueError, match="requires chunk_size"):
+        ContinuousScheduler(
+            model, params,
+            SchedulerConfig(max_batch=1, max_seq=MAX_SEQ, prefill_tokens=8))
+
+
+# ---------------------------------------------------------------------------
+# arrival queue + trace generator
+# ---------------------------------------------------------------------------
+
+
+def test_arrival_queue_insort_scales_and_orders():
+    """Regression for the O(n^2 log n) full re-sort per push: several
+    thousand submits in adversarial (reverse-arrival) order stay cheap and
+    come out ordered by (arrival, req_id) via the public accessor."""
+    import time as _time
+    q = ArrivalQueue()
+    toks = np.ones((2,), np.int32)
+    rng = np.random.default_rng(0)
+    arrivals = np.concatenate([np.linspace(100.0, 0.0, 2000),
+                               rng.uniform(0.0, 100.0, 2000)])
+    t0 = _time.perf_counter()
+    for a in arrivals:
+        q.push(Request(tokens=toks, max_new_tokens=1, arrival=float(a)))
+    elapsed = _time.perf_counter() - t0
+    pend = q.pending()
+    assert len(pend) == len(q) == 4000
+    keys = [(s.request.arrival, s.req_id) for s in pend]
+    assert keys == sorted(keys)
+    assert elapsed < 5.0          # generous; the old path was ~quadratic
+
+
+def test_poisson_trace_quantum_grid():
+    """Prompt lengths land ON the quantum grid even when the range bounds
+    are off-grid (the old round-down emitted the off-grid lower bound)."""
+    tr = poisson_trace(64, rate=1.0, vocab_size=128, prompt_lens=(6, 21),
+                       prompt_quantum=4, seed=0)
+    lens = sorted({r.prompt_len for r in tr})
+    assert all(l % 4 == 0 for l in lens)
+    # ceil grid of lo=6, clamped at hi=21's grid floor — a caller sizing
+    # hi against max_seq must never receive a longer prompt than asked
+    assert lens[0] >= 8 and lens[-1] <= 20
+
+
+def test_poisson_trace_rejects_oversized_quantum():
+    """No on-grid length exists past a range's upper bound — emitting a
+    longer-than-asked prompt would overflow callers' max_seq sizing."""
+    with pytest.raises(ValueError, match="prompt_quantum"):
+        poisson_trace(4, rate=1.0, vocab_size=128, prompt_lens=(2, 6),
+                      prompt_quantum=8, seed=0)
+    with pytest.raises(ValueError, match="long_prompt_lens"):
+        poisson_trace(4, rate=1.0, vocab_size=128, prompt_lens=(8, 16),
+                      long_prompt_lens=(2, 6), long_fraction=0.5,
+                      prompt_quantum=8, seed=0)
+
+
+def test_poisson_trace_long_tail():
+    long = poisson_trace(64, rate=1.0, vocab_size=128, prompt_lens=(4, 8),
+                         long_prompt_lens=(40, 48), long_fraction=0.5,
+                         prompt_quantum=4, seed=0)
+    lens = [r.prompt_len for r in long]
+    assert any(l >= 40 for l in lens) and any(l <= 8 for l in lens)
+    assert all(l % 4 == 0 for l in lens)
+    # RNG call sequence is unchanged while the tail is disabled
+    a = poisson_trace(8, rate=1.0, vocab_size=128, seed=3)
+    b = poisson_trace(8, rate=1.0, vocab_size=128, seed=3, long_fraction=0.9)
+    for x, y in zip(a, b):
+        assert x.arrival == y.arrival
+        np.testing.assert_array_equal(x.tokens, y.tokens)
 
 
 # ---------------------------------------------------------------------------
@@ -175,10 +420,11 @@ def test_admission_never_overcommits_deterministic(model_and_params):
     model, params = model_and_params
     blocked = 0
     for seed in range(3):
-        # rate 5.0 clusters arrivals so a 3rd request contends while two
-        # (the whole device+host capacity) are running
+        # rate 5.0 clusters arrivals and decode budgets of 3-8 steps keep
+        # capacity held, so a 3rd request contends while two (the whole
+        # device+host capacity) are running
         reqs = poisson_trace(6, rate=5.0, vocab_size=CFG.vocab_size,
-                             prompt_lens=(4, 8), new_tokens=(1, 4),
+                             prompt_lens=(4, 8), new_tokens=(3, 8),
                              prompt_quantum=4, seed=seed)
         sched = _run_checking_invariants(model, params, reqs,
                                          slots=3, device_rows=1, host_rows=1)
@@ -276,7 +522,9 @@ def test_unadmittable_request_raises(model_and_params):
 
 def test_engine_round_trip_uses_stable_keys(model_and_params):
     model, params = model_and_params
-    eng = ServeEngine(model, params, max_seq=MAX_SEQ, offload_kv=True)
+    # intentionally exercises the one-release deprecation shim (private pool)
+    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
+        eng = ServeEngine(model, params, max_seq=MAX_SEQ, offload_kv=True)
     toks = jnp.ones((1, 4), jnp.int32)
     eng.generate({"tokens": toks}, 5)
     snap = eng.pool_stats()
