@@ -52,6 +52,36 @@ HW_SPECS: Dict[str, HardwareSpec] = {
 _OFFLOAD_MODES = ("kv_offload", "paged", "continuous")
 
 
+@dataclass(frozen=True)
+class PrefixCacheConfig:
+    """Cross-request prefix cache knobs (``repro.prefix``): disabled by
+    default; enabling requires chunked prefill (``chunk_size``) on a
+    scheduler mode, since a prefix hit resumes prefill at the match
+    offset."""
+
+    enable: bool = False
+    page_size: int = 16            # tokens per cached/shared KV page
+    max_pages: Optional[int] = None   # cache footprint budget (None = ∞)
+    min_match_pages: int = 1       # shortest match worth taking
+    # tier pinning policy: the lowest pool tier a cached page may age down
+    # to; a page the pool spills below this floor is invalidated (cheaper
+    # to recompute than to fetch back)
+    pin_tier: str = "host"
+
+    def __post_init__(self) -> None:
+        if self.page_size < 1:
+            raise ValueError("prefix_cache.page_size must be >= 1")
+        if self.max_pages is not None and self.max_pages < 1:
+            raise ValueError(
+                "prefix_cache.max_pages must be >= 1 (or None = unbounded)")
+        if self.min_match_pages < 1:
+            raise ValueError("prefix_cache.min_match_pages must be >= 1")
+        if self.pin_tier not in ("device", "host", "remote"):
+            raise ValueError(
+                f"prefix_cache.pin_tier {self.pin_tier!r} not in "
+                "('device', 'host', 'remote')")
+
+
 def _options_from(cls, d: Dict[str, Any]):
     """Rebuild a frozen options dataclass from a dict, restoring the tuple
     fields JSON flattened into lists. Unknown keys are a hard error — a
@@ -93,6 +123,8 @@ class OffloadConfig:
     prefill_tokens: Optional[int] = None
     page_size: int = 32
     cache_dtype: str = "float32"
+    # cross-request prefix cache (scheduler modes with chunked prefill)
+    prefix_cache: PrefixCacheConfig = field(default_factory=PrefixCacheConfig)
 
     # -- planner knobs --------------------------------------------------
     insertion: Optional[InsertionOptions] = None   # None → mode default
@@ -131,6 +163,17 @@ class OffloadConfig:
                     "requires chunk_size")
             if self.prefill_tokens < 1:
                 raise ValueError("prefill_tokens must be >= 1")
+        if self.prefix_cache.enable:
+            if self.chunk_size is None:
+                raise ValueError(
+                    "prefix_cache.enable requires chunk_size (a prefix hit "
+                    "resumes prefill at the match offset, which only the "
+                    "chunked path supports)")
+            if self.mode not in ("continuous", "kv_offload"):
+                raise ValueError(
+                    "prefix_cache.enable requires a scheduler mode "
+                    "('continuous' or 'kv_offload'), "
+                    f"got mode={self.mode!r}")
 
     # ------------------------------------------------------------------
     @property
@@ -191,6 +234,9 @@ class OffloadConfig:
         if isinstance(kwargs.get("schedule"), dict):
             kwargs["schedule"] = _options_from(ScheduleOptions,
                                                kwargs["schedule"])
+        if isinstance(kwargs.get("prefix_cache"), dict):
+            kwargs["prefix_cache"] = _options_from(PrefixCacheConfig,
+                                                   kwargs["prefix_cache"])
         return cls(**kwargs)
 
     def replace(self, **changes) -> "OffloadConfig":

@@ -21,9 +21,17 @@ scheduler is reused by the next), and its transfer engine — whose in-flight
 depth grows to cover the largest consumer via the ``auto`` depth policy
 (`pool.auto_depth`) instead of each call site hard-coding its own.
 
-Subsystem constructors remain importable for one release behind thin
-deprecation shims (`ServeEngine(offload_kv=True)` etc. still work and warn);
-new code should only ever construct through the session.
+Offload-mode subsystems refuse to build private pools (the old one-release
+deprecation shims are gone): `ServeEngine(offload_kv=True)`,
+`ContinuousScheduler(kv_offload=True)`, and `PagedKVCache.create()` all
+require an explicit pool — construct through the session.
+
+With ``config.prefix_cache.enable`` the session also owns one
+`PrefixCacheManager` (``repro.prefix``): every scheduler it hands out
+shares the same radix index and cached pages, so one request's retired
+prompt prefix serves every later scheduler's admissions, and the cached
+pages live in the session pool under the same tiering/eviction ledger as
+everything else.
 """
 
 from __future__ import annotations
@@ -40,6 +48,7 @@ from repro.core.jax_exec import PlanExecutor
 from repro.core.planner import HyperOffloadPlanner, OffloadPlan
 from repro.offload.kvcache import PagedKVCache
 from repro.pool import MemoryPoolManager, default_pool
+from repro.prefix import PrefixCacheManager
 from repro.sched.scheduler import ContinuousScheduler, SchedulerConfig
 from repro.serving.engine import ServeEngine
 from repro.training.step import TrainStepConfig, make_train_step
@@ -78,6 +87,12 @@ class HyperOffloadSession:
         self._engines: List[ServeEngine] = []
         self._schedulers: List[ContinuousScheduler] = []
         self._paged: List[PagedKVCache] = []
+        self.prefix_cache: Optional[PrefixCacheManager] = None
+        if c.prefix_cache.enable:
+            pc = c.prefix_cache
+            self.prefix_cache = PrefixCacheManager(
+                self.pool, page_size=pc.page_size, max_pages=pc.max_pages,
+                min_match_pages=pc.min_match_pages, pin_tier=pc.pin_tier)
         self._closed = False
 
     # -- planning -------------------------------------------------------
@@ -139,7 +154,8 @@ class HyperOffloadSession:
         elif overrides:
             raise TypeError("pass either cfg or field overrides, not both")
         sched = ContinuousScheduler(model, params, cfg, pool=self.pool,
-                                    plan_cache=self._plan_cache)
+                                    plan_cache=self._plan_cache,
+                                    prefix_cache=self.prefix_cache)
         self._schedulers.append(sched)
         return sched
 
@@ -206,14 +222,15 @@ class HyperOffloadSession:
 
         sched = {"schedulers": len(self._schedulers), "steps": 0, "joins": 0,
                  "retires": 0, "prefill_tokens": 0, "prefill_chunks": 0,
-                 "decoded_tokens": 0,
-                 "pages_parked": 0, "cold_spills": 0, "admission_blocked": 0}
+                 "decoded_tokens": 0, "pages_parked": 0, "cold_spills": 0,
+                 "prefix_hits": 0, "prefix_hit_tokens": 0,
+                 "admission_blocked": 0}
         prefetch = {"steps": 0, "fetches_issued": 0, "layers_planned": 0}
         leads: List[float] = []
         for s in self._schedulers:
             for k in ("steps", "joins", "retires", "prefill_tokens",
                       "prefill_chunks", "decoded_tokens", "pages_parked",
-                      "cold_spills"):
+                      "cold_spills", "prefix_hits", "prefix_hit_tokens"):
                 sched[k] += getattr(s.stats, k)
             sched["admission_blocked"] += s.admission.blocked
             pf = s.prefetch_stats()
@@ -238,6 +255,8 @@ class HyperOffloadSession:
             "serve": serve,
             "sched": sched,
             "paged": paged,
+            "prefix": None if self.prefix_cache is None
+            else self.prefix_cache.snapshot(),
             "plans_cached": len(self._plan_cache),
         }
 
@@ -252,6 +271,8 @@ class HyperOffloadSession:
             s.close()
         for e in self._engines:
             e.close()
+        if self.prefix_cache is not None:
+            self.prefix_cache.close()
         if self._owns_pool:
             self.pool.close()
 

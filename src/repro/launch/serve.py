@@ -3,15 +3,13 @@
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
         --prompt-len 32 --new-tokens 32 --batch 4 [--mode kv_offload]
 
-``--mode`` selects the `OffloadConfig` mode (``--offload-kv`` remains as a
-deprecated alias for ``--mode kv_offload``).
+``--mode`` selects the `OffloadConfig` mode.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -32,17 +30,11 @@ def main(argv=None) -> int:
     # this launcher drives ServeEngine only — the paged/continuous modes
     # live in examples/serve_offload.py and benchmarks/serve_continuous.py
     ap.add_argument("--mode", choices=("resident", "kv_offload"),
-                    default=None)
-    ap.add_argument("--offload-kv", action="store_true",
-                    help="deprecated: use --mode kv_offload")
+                    default="resident")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    if args.offload_kv and args.mode is None:
-        warnings.warn("--offload-kv is deprecated; use --mode kv_offload",
-                      DeprecationWarning)
-        args.mode = "kv_offload"
-    mode = args.mode or "resident"
+    mode = args.mode
 
     cfg = REGISTRY[args.arch]
     if args.smoke:

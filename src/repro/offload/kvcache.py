@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import warnings
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -33,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.pool import (
-    HOST_TIER, MemoryPoolManager, TransferHandle, auto_depth, default_pool,
+    HOST_TIER, MemoryPoolManager, TransferHandle, auto_depth,
 )
 
 NEG_INF = -2.3819763e38
@@ -158,7 +157,6 @@ class PagedKVCache:
     fetches: int = 0           # pool→device page transfers (stats)
     flushes: int = 0           # device→pool page stores
     key_ns: str = ""           # pool-key namespace (unique per instance)
-    owns_pool: bool = False    # a shared (session) pool is never closed here
 
     # ------------------------------------------------------------------
     @classmethod
@@ -166,30 +164,16 @@ class PagedKVCache:
                n_kv_heads: int, head_dim: int, dtype=jnp.float32,
                pool: Optional[MemoryPoolManager] = None) -> "PagedKVCache":
         n_pages = -(-max_seq // page_size)
-        owns_pool = pool is None
         if pool is None:
-            # Deprecation shim: a private pool keeps old call sites working
-            # for one release; new code constructs through
-            # repro.api.HyperOffloadSession.paged_kv.
-            warnings.warn(
-                "PagedKVCache.create() without a pool builds a private "
-                "MemoryPoolManager; construct caches through "
-                "repro.api.HyperOffloadSession.paged_kv (mode='paged') "
-                "instead", DeprecationWarning, stacklevel=2)
-            page_nbytes = (batch * page_size * n_kv_heads * head_dim
-                           * jnp.dtype(dtype).itemsize)
-            # host tier sized to exactly hold every K and V page; overflow
-            # (e.g. a shared pool across layers) spills to the remote tier.
-            # The auto depth policy covers a full dense fetch (K+V of every
-            # page) so a prefetch batch issues completely before any wait.
-            pool = default_pool(host_capacity=2 * n_pages * page_nbytes,
-                                transfer_depth=auto_depth(pages=n_pages))
-        else:
-            pool.transfer.ensure_depth(auto_depth(pages=n_pages))
+            raise ValueError(
+                "PagedKVCache.create() requires a pool; construct caches "
+                "through repro.api.HyperOffloadSession.paged_kv "
+                "(mode='paged')")
+        pool.transfer.ensure_depth(auto_depth(pages=n_pages))
         return cls(
             page_size=page_size, n_pages=n_pages, batch=batch,
             n_kv_heads=n_kv_heads, head_dim=head_dim, dtype=dtype,
-            pool=pool, owns_pool=owns_pool,
+            pool=pool,
             k_pool=[None] * n_pages, v_pool=[None] * n_pages,
             k_summary=jnp.zeros((n_pages, batch, n_kv_heads, head_dim), dtype),
             k_tail=jnp.zeros((batch, page_size, n_kv_heads, head_dim), dtype),
@@ -209,10 +193,8 @@ class PagedKVCache:
         return self.pool.snapshot()
 
     def close(self) -> None:
-        """Shut down the pool's transfer workers if this cache owns its
-        pool; a shared (session) pool is its owner's to close."""
-        if self.owns_pool:
-            self.pool.close()
+        """The (always caller-provided, possibly shared) pool is its
+        owner's to close; nothing per-cache needs shutting down."""
 
     # ------------------------------------------------------------------
     def _store_page(self, page_idx: int, k_page: jax.Array,

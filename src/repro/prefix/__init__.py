@@ -1,0 +1,16 @@
+"""Cross-request prefix KV cache: radix-indexed, ref-counted,
+copy-on-write page sharing over the memory-pool tiers."""
+
+from repro.prefix.cache import (
+    PREFIX_PAGE_PRIORITY, PrefixCacheManager, PrefixCacheStats, PrefixHit,
+)
+from repro.prefix.index import PrefixNode, RadixPrefixIndex
+
+__all__ = [
+    "PREFIX_PAGE_PRIORITY",
+    "PrefixCacheManager",
+    "PrefixCacheStats",
+    "PrefixHit",
+    "PrefixNode",
+    "RadixPrefixIndex",
+]

@@ -111,6 +111,8 @@ def poisson_trace(n_requests: int, *, rate: float, vocab_size: int,
                   prompt_quantum: int = 1,
                   long_prompt_lens: Optional[Sequence[int]] = None,
                   long_fraction: float = 0.0,
+                  n_prefix_families: Optional[int] = None,
+                  prefix_len: int = 0,
                   seed: int = 0) -> List[Request]:
     """Deterministic mixed-length Poisson arrival trace (benchmarks/tests):
     exponential inter-arrival gaps at ``rate`` requests per unit of
@@ -133,7 +135,21 @@ def poisson_trace(n_requests: int, *, rate: float, vocab_size: int,
     the stall-inducing traffic the chunked-prefill benchmark measures
     p99 step latency under. When ``long_prompt_lens`` is None the RNG
     call sequence is unchanged, so existing seeded traces stay
-    byte-identical."""
+    byte-identical.
+
+    ``n_prefix_families`` + ``prefix_len`` switch on **shared-prefix
+    mode** (the prefix-cache benchmark's traffic shape): ``prefix_len``
+    tokens are drawn once per family, and each request's prompt is one
+    family's shared prefix followed by its own per-request suffix of the
+    usual ``prompt_lens``-sampled length (total prompt = ``prefix_len`` +
+    suffix — callers size ``max_seq`` accordingly). The family is drawn
+    uniformly per request. When ``n_prefix_families`` is None the RNG call
+    sequence is unchanged — seeded traces stay byte-identical."""
+    if n_prefix_families is not None:
+        if n_prefix_families < 1:
+            raise ValueError("n_prefix_families must be >= 1")
+        if prefix_len < 1:
+            raise ValueError("shared-prefix mode needs prefix_len >= 1")
     q = prompt_quantum
     for rng_name, rng_range in (("prompt_lens", prompt_lens),
                                 ("long_prompt_lens", long_prompt_lens)):
@@ -143,6 +159,11 @@ def poisson_trace(n_requests: int, *, rate: float, vocab_size: int,
                 f"range {tuple(rng_range)}: no on-grid length can be "
                 "emitted without violating a bound")
     rng = np.random.default_rng(seed)
+    prefixes = None
+    if n_prefix_families is not None:
+        prefixes = [rng.integers(0, vocab_size, size=prefix_len,
+                                 dtype=np.int32)
+                    for _ in range(n_prefix_families)]
     t = 0.0
     out: List[Request] = []
     for i in range(n_requests):
@@ -155,5 +176,8 @@ def poisson_trace(n_requests: int, *, rate: float, vocab_size: int,
         s = min(-(-s // q) * q, (hi // q) * q)
         m = int(rng.integers(new_tokens[0], new_tokens[1] + 1))
         toks = rng.integers(0, vocab_size, size=s, dtype=np.int32)
+        if prefixes is not None:
+            fam = int(rng.integers(0, n_prefix_families))
+            toks = np.concatenate([prefixes[fam], toks])
         out.append(Request(tokens=toks, max_new_tokens=m, arrival=t, seed=i))
     return out

@@ -88,6 +88,7 @@ class RequestState:
     out: List[int] = dataclasses.field(default_factory=list)
     key: Optional[jax.Array] = None    # per-request sampling key stream
     pages: Optional[KVPageTable] = None
+    prefix_hit: Optional[Any] = None   # PrefixHit while admitted (refs held)
     reserve_key: str = ""              # pool reservation handle
     last_step: int = -1                # last scheduler step that decoded us
     joined_step: int = -1

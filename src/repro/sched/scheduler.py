@@ -48,7 +48,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -63,6 +62,7 @@ from repro.pool import (
     DEVICE_TIER, MemoryPoolManager, auto_depth, default_pool,
 )
 from repro.pool.manager import PoolEntry
+from repro.prefix import PrefixCacheManager
 from repro.sched.prefetch import InFlightFetches, PlanPrefetcher
 from repro.sched.queue import AdmissionController, ArrivalQueue
 from repro.sched.requests import DECODE, DONE, PREFILL, Request, RequestState
@@ -105,13 +105,16 @@ class SchedStats:
     decoded_tokens: int = 0
     pages_parked: int = 0
     cold_spills: int = 0          # our pages spilled down-tier by the manager
+    prefix_hits: int = 0          # admissions that matched the prefix cache
+    prefix_hit_tokens: int = 0    # prompt tokens served from cached prefixes
 
 
 class ContinuousScheduler:
     def __init__(self, model: Model, params: Any,
                  cfg: SchedulerConfig = SchedulerConfig(), *,
                  pool: Optional[MemoryPoolManager] = None,
-                 plan_cache: Optional[Dict[Any, Any]] = None) -> None:
+                 plan_cache: Optional[Dict[Any, Any]] = None,
+                 prefix_cache: Optional[PrefixCacheManager] = None) -> None:
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -158,15 +161,10 @@ class ContinuousScheduler:
             for si, _, pi in self._flat)
         if pool is None:
             if cfg.kv_offload:
-                # Deprecation shim: a private pool keeps old call sites
-                # working for one release; new code constructs through
-                # repro.api.HyperOffloadSession.scheduler.
-                warnings.warn(
-                    "ContinuousScheduler(kv_offload=True) without a pool "
-                    "builds a private MemoryPoolManager; construct "
-                    "schedulers through repro.api.HyperOffloadSession."
-                    "scheduler (mode='kv_offload') instead",
-                    DeprecationWarning, stacklevel=2)
+                raise ValueError(
+                    "ContinuousScheduler(kv_offload=True) requires a pool; "
+                    "construct schedulers through repro.api."
+                    "HyperOffloadSession.scheduler (mode='kv_offload')")
             pool = default_pool(transfer_depth=auto_depth(pages=pages))
         elif cfg.kv_offload:
             # shared (session) pool: grow the engine to cover this consumer
@@ -185,6 +183,24 @@ class ContinuousScheduler:
                 hw=cfg.hw, refine=cfg.refine, insert_opts=cfg.insert_opts,
                 plan_cache=plan_cache)
             self.pool.add_evict_listener(self._on_evict)
+        self.prefix_cache = prefix_cache
+        if prefix_cache is not None:
+            if cfg.chunk_size is None:
+                raise ValueError(
+                    "prefix_cache requires chunked prefill (chunk_size): a "
+                    "hit resumes prefill at the match offset, which only "
+                    "the chunked path supports")
+            if cfg.kv_offload and prefix_cache.pool is not self.pool:
+                raise ValueError(
+                    "prefix_cache must share the scheduler's pool in "
+                    "kv_offload mode (prefix-page fetches ride the same "
+                    "PlanPrefetcher plan)")
+            # prefix reuse slices/restores KV by absolute position, which
+            # is only exact while no cache leaf's ring buffer has wrapped:
+            # requests longer than the shortest leaf (a sliding-window
+            # layer's window) bypass the cache entirely
+            self._prefix_seq_limit = min(
+                int(leaf.shape[2]) for leaf in jax.tree.leaves(self.cache))
         self.now = 0.0
         self._closed = False
 
@@ -212,6 +228,8 @@ class ContinuousScheduler:
             if st is not None and st.pages is not None:
                 st.pages.drop()
             if st is not None:
+                if st.prefix_hit is not None and self.prefix_cache is not None:
+                    self.prefix_cache.release(st.prefix_hit)
                 self.admission.release(st)
         if self._owns_pool:
             self.pool.close()
@@ -222,6 +240,10 @@ class ContinuousScheduler:
     def prefetch_stats(self) -> Optional[Dict[str, float]]:
         return None if self.prefetcher is None else \
             self.prefetcher.stats.snapshot()
+
+    def prefix_stats(self) -> Optional[Dict[str, float]]:
+        return None if self.prefix_cache is None else \
+            self.prefix_cache.snapshot()
 
     # -- step phases ---------------------------------------------------
     def _on_evict(self, entry: PoolEntry, dst: str) -> None:
@@ -331,11 +353,68 @@ class ContinuousScheduler:
 
     def _join_chunked(self, state: RequestState, slot: int) -> None:
         """Take the slot and the capacity reservation; prefill advances in
-        ``_prefill_chunk_step`` calls from here on."""
+        ``_prefill_chunk_step`` calls from here on. With a prefix cache, a
+        hit pre-loads the shared pages and moves ``prefill_pos`` past
+        them — only the uncached suffix is ever prefilled."""
         self._take_slot(state, slot)
         state.prefill_pos = 0
         state.chunk_cache = self.model.init_cache(1, self.cfg.max_seq,
                                                   self.cfg.cache_dtype)
+        if self.prefix_cache is not None:
+            self._apply_prefix_hit(state)
+
+    def _apply_prefix_hit(self, state: RequestState) -> None:
+        """Admission-side prefix hit: match the prompt, *copy* every shared
+        page into the request's own row cache (the copy is what makes the
+        sharing copy-on-write — the cached entries are never written
+        again), and resume prefill at the match offset. The match is capped
+        at ``prompt_len - 1`` so at least one real token remains to prefill
+        (the first sampled token needs its logits). Read refs on the
+        matched pages are held until retirement."""
+        req = state.request
+        if req.total_len > self._prefix_seq_limit:
+            return   # a ring-buffer leaf would wrap — positions unreliable
+        hit = self.prefix_cache.lookup(req.tokens,
+                                       max_tokens=req.prompt_len - 1)
+        if hit is None:
+            return
+        state.prefix_hit = hit
+        pages = hit.page_keys()
+        values = self._fetch_prefix_pages(pages)
+        ps = self.prefix_cache.page_size
+        row = state.chunk_cache
+        for i, (si, ri, pi) in enumerate(self._flat):
+            leaves, treedef = jax.tree.flatten(row["segments"][si][f"p{pi}"])
+            for j in range(len(leaves)):
+                for p, entries in enumerate(pages):
+                    arr = values[entries[f"L{i}.{j}"]]
+                    leaves[j] = leaves[j].at[
+                        ri, 0, p * ps:(p + 1) * ps].set(arr)
+            row["segments"][si][f"p{pi}"] = jax.tree.unflatten(treedef, leaves)
+        state.prefill_pos = hit.tokens
+        self.stats.prefix_hits += 1
+        self.stats.prefix_hit_tokens += hit.tokens
+
+    def _fetch_prefix_pages(self, pages: List[Dict[str, str]]) -> Dict[str, Any]:
+        """Materialize the matched pages' arrays. Host/remote-resident hits
+        ride the ``PlanPrefetcher`` plan (kv_offload mode): every page's
+        fetch issues in the refined order before any is waited on. Pages
+        the plan doesn't cover — and all pages in resident mode — fall back
+        to a sync pool get. Arrays are decommitted (NumPy) so the scatter
+        into the row cache keeps the one-executable jit signature."""
+        keys_by_layer: Dict[int, List[str]] = {}
+        all_keys: List[str] = []
+        for entries in pages:
+            for label, key in entries.items():
+                layer = int(label[1:label.index(".")])
+                keys_by_layer.setdefault(layer, []).append(key)
+                all_keys.append(key)
+        fetched: Dict[str, Any] = {}
+        if self.prefetcher is not None:
+            fetched = self.prefetcher.issue(keys_by_layer).wait_all()
+        pool = self.prefix_cache.pool
+        return {k: np.asarray(fetched[k] if k in fetched else pool.get(k))
+                for k in all_keys}
 
     def _prefill_chunk_step(
             self, state: RequestState,
@@ -388,21 +467,35 @@ class ContinuousScheduler:
 
     def _restore_chunk_row(self, state: RequestState) -> Any:
         """Inverse of ``_park_chunk_row``: the resident row is handed back
-        directly (and detached — jit donates it); a parked row is fetched
-        page-by-page from wherever the pool's eviction left it."""
+        directly (and detached — jit donates it); a parked row rides the
+        ``PlanPrefetcher`` plan — every page's fetch issues in the refined
+        order before any is waited on, the same async path decode pages
+        take, instead of the old page-by-page sync round trip."""
         if state.chunk_cache is not None:
             row, state.chunk_cache = state.chunk_cache, None
             return row
         row = self.model.init_cache(1, self.cfg.max_seq, self.cfg.cache_dtype)
+        keys_by_layer: Dict[int, List[str]] = {}
+        for i, (si, ri, pi) in enumerate(self._flat):
+            n = len(jax.tree.leaves(row["segments"][si][f"p{pi}"]))
+            keys_by_layer.setdefault(i, []).extend(
+                state.pages.key_of(f"L{i}.{j}") for j in range(n))
+        fetched: Dict[str, Any] = {}
+        if self.prefetcher is not None:
+            fetched = self.prefetcher.issue(keys_by_layer).wait_all()
         for i, (si, ri, pi) in enumerate(self._flat):
             leaves, treedef = jax.tree.flatten(row["segments"][si][f"p{pi}"])
             for j in range(len(leaves)):
-                # fetched pages are committed to their tier's device; strip
-                # the commitment so restored rows share the (uncommitted)
-                # jit signature of fresh/resident rows — one compiled chunk
-                # executable per chunk shape, not one per residency path
-                leaves[j] = leaves[j].at[ri, 0].set(
-                    np.asarray(state.pages.fetch(f"L{i}.{j}")))
+                # layers outside the plan fall back to a sync fetch; either
+                # way pages come back committed to their tier's device, so
+                # strip the commitment (NumPy) so restored rows share the
+                # (uncommitted) jit signature of fresh/resident rows — one
+                # compiled chunk executable per chunk shape, not one per
+                # residency path
+                val = fetched.get(state.pages.key_of(f"L{i}.{j}"))
+                if val is None:
+                    val = state.pages.fetch(f"L{i}.{j}")
+                leaves[j] = leaves[j].at[ri, 0].set(np.asarray(val))
             row["segments"][si][f"p{pi}"] = jax.tree.unflatten(treedef, leaves)
         return row
 
@@ -491,6 +584,10 @@ class ContinuousScheduler:
     def _retire(self, state: RequestState) -> None:
         state.status = DONE
         state.t_done = self.now
+        if self.prefix_cache is not None:
+            self._donate_prefix(state)
+            if state.prefix_hit is not None:
+                self.prefix_cache.release(state.prefix_hit)
         if state.pages is not None:
             state.pages.drop()
         self.admission.release(state)
@@ -498,6 +595,33 @@ class ContinuousScheduler:
         state.slot = None
         self.finished[state.req_id] = state
         self.stats.retires += 1
+
+    def _donate_prefix(self, state: RequestState) -> None:
+        """Retirement-side donation: the retired prompt's full prefix pages
+        enter the cache instead of being freed. The stacked decode cache
+        still holds this slot's rows (retire runs right after the decode or
+        final-chunk scatter), so pages are sliced straight out of it —
+        decode only ever writes at positions >= prompt_len, so prompt-range
+        slices are exactly the prefill-time KV. ``extract`` is lazy: the
+        manager calls it only for pages not already cached."""
+        req = state.request
+        if req.total_len > self._prefix_seq_limit:
+            return
+        n_pages = req.prompt_len // self.prefix_cache.page_size
+        if n_pages < 1:
+            return
+        slot, ps = state.slot, self.prefix_cache.page_size
+
+        def extract(p: int) -> Dict[str, jax.Array]:
+            a, b = p * ps, (p + 1) * ps
+            page: Dict[str, jax.Array] = {}
+            for i, (si, ri, pi) in enumerate(self._flat):
+                leaves = jax.tree.leaves(self._subtree(si, pi))
+                for j, leaf in enumerate(leaves):
+                    page[f"L{i}.{j}"] = leaf[ri, slot, a:b]
+            return page
+
+        self.prefix_cache.donate(req.tokens, n_pages, extract)
 
     def _park_and_issue(self) -> None:
         """kv_offload epilogue: park every running request's pages (stable

@@ -21,14 +21,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
-import warnings
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model
-from repro.pool import HOST_TIER, MemoryPoolManager, auto_depth, default_pool
+from repro.pool import HOST_TIER, MemoryPoolManager, auto_depth
 from repro.serving.sampling import sample_token
 
 
@@ -84,18 +83,12 @@ class ServeEngine:
         # wait (2 K/V leaves per layer plus headroom)
         depth = auto_depth(
             layers=getattr(getattr(model, "cfg", None), "n_layers", 16))
-        self._owns_pool = pool is None and offload_kv
-        if self._owns_pool:
-            # Deprecation shim: the engine builds a private pool so old
-            # call sites keep working for one release. New code constructs
-            # through the session, which shares one pool across subsystems.
-            warnings.warn(
-                "ServeEngine(offload_kv=True) without a pool builds a "
-                "private MemoryPoolManager; construct engines through "
-                "repro.api.HyperOffloadSession.serve_engine (mode="
-                "'kv_offload') instead", DeprecationWarning, stacklevel=2)
-            pool = default_pool(transfer_depth=depth)
-        elif offload_kv and pool is not None:
+        if offload_kv and pool is None:
+            raise ValueError(
+                "ServeEngine(offload_kv=True) requires a pool; construct "
+                "engines through repro.api.HyperOffloadSession.serve_engine "
+                "(mode='kv_offload')")
+        if offload_kv:
             # shared (session) pool: declare this consumer's depth need
             pool.transfer.ensure_depth(depth)
         self.pool = pool
@@ -111,14 +104,12 @@ class ServeEngine:
         return self.pool.snapshot() if self.pool is not None else None
 
     def close(self) -> None:
-        """Shut down the pool's transfer workers, if this engine owns the
-        pool (a caller-provided pool is the caller's to close). Idempotent —
-        safe to call from both user code and a finalizer."""
+        """Mark the engine closed. The pool is always caller-provided
+        (session-owned) and is the caller's to close. Idempotent — safe to
+        call from both user code and a finalizer."""
         if self._closed:
             return
         self._closed = True
-        if self._owns_pool:
-            self.pool.close()
 
     # ------------------------------------------------------------------
     def _cache_round_trip(self, cache: Any) -> Any:

@@ -239,46 +239,25 @@ def test_session_scheduler_overrides(model_and_params):
 
 
 # ---------------------------------------------------------------------------
-# back-compat deprecation shims
+# implicit-private-pool construction is gone (was a one-release shim)
 # ---------------------------------------------------------------------------
 
 
-def test_engine_old_kwargs_still_work_and_warn(model_and_params):
+def test_offload_construction_requires_explicit_pool(model_and_params):
     model, params = model_and_params
-    prompt = {"tokens": jnp.ones((1, 4), jnp.int32)}
-    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
-        old = ServeEngine(model, params, max_seq=MAX_SEQ, offload_kv=True)
-    out_old = old.generate(prompt, 4)
-    old.close()
-    with HyperOffloadSession(OffloadConfig(mode="kv_offload",
-                                           max_seq=MAX_SEQ)) as session:
-        out_new = session.serve_engine(model, params).generate(prompt, 4)
-    np.testing.assert_array_equal(np.asarray(out_old), np.asarray(out_new))
-
-
-def test_scheduler_old_construction_warns(model_and_params):
-    model, params = model_and_params
-    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
-        sched = ContinuousScheduler(
+    with pytest.raises(ValueError, match="HyperOffloadSession"):
+        ServeEngine(model, params, max_seq=MAX_SEQ, offload_kv=True)
+    with pytest.raises(ValueError, match="HyperOffloadSession"):
+        ContinuousScheduler(
             model, params,
             SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, kv_offload=True))
-    sched.run([Request(tokens=np.ones((4,), np.int32), max_new_tokens=2,
-                       seed=0)])
-    sched.close()
-
-
-def test_paged_old_construction_warns():
-    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
-        cache = PagedKVCache.create(batch=1, max_seq=64, page_size=16,
-                                    n_kv_heads=2, head_dim=8)
-    cache.prefill(jnp.zeros((1, 32, 2, 8)), jnp.zeros((1, 32, 2, 8)))
-    assert cache.full_pages == 2
-    cache.close()
+    with pytest.raises(ValueError, match="HyperOffloadSession"):
+        PagedKVCache.create(batch=1, max_seq=64, page_size=16,
+                            n_kv_heads=2, head_dim=8)
 
 
 def test_session_construction_does_not_warn(model_and_params):
-    """The front-door path is warning-free — the shims only fire on the
-    old implicit-private-pool constructions."""
+    """The front-door path raises no deprecation noise anywhere."""
     import warnings
     model, params = model_and_params
     with warnings.catch_warnings():

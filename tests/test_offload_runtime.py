@@ -12,6 +12,7 @@ from repro.data.pipeline import SyntheticTokens
 from repro.models.model import build_model
 from repro.offload.kvcache import PagedKVCache
 from repro.offload.optstate import device_fetch_state, host_offload_state
+from repro.pool import default_pool
 from repro.pool.backend import is_host_resident
 from repro.kernels.ref import decode_attention_ref
 from repro.serving.engine import ServeEngine
@@ -65,9 +66,9 @@ def test_serving_offload_kv_equals_resident():
     data = SyntheticTokens(CFG.vocab_size, seq_len=16, global_batch=4)
     prompt = {"tokens": data.batch(0)["tokens"]}
     res = ServeEngine(m, params, max_seq=32).generate(prompt, 8)
-    # intentionally exercises the one-release deprecation shim (private pool)
-    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
-        off_engine = ServeEngine(m, params, max_seq=32, offload_kv=True)
+    pool = default_pool()
+    off_engine = ServeEngine(m, params, max_seq=32, offload_kv=True,
+                             pool=pool)
     off = off_engine.generate(prompt, 8)
     np.testing.assert_array_equal(np.asarray(res), np.asarray(off))
     assert off_engine.stats.cache_round_trips == 7
@@ -87,10 +88,9 @@ def test_paged_kvcache_all_pages_exact():
     """Selecting all pages must reproduce dense ring attention exactly."""
     b, hq, hkv, d, page = 2, 4, 2, 32, 8
     max_seq = 64
-    # intentionally exercises the one-release deprecation shim (private pool)
-    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
-        cache = PagedKVCache.create(batch=b, max_seq=max_seq, page_size=page,
-                                    n_kv_heads=hkv, head_dim=d)
+    cache = PagedKVCache.create(batch=b, max_seq=max_seq, page_size=page,
+                                n_kv_heads=hkv, head_dim=d,
+                                pool=default_pool())
     ks = jax.random.split(jax.random.key(0), 3)
     s0 = 29   # 3 full pages + tail of 5
     k_seq = jax.random.normal(ks[0], (b, s0, hkv, d))
@@ -112,10 +112,9 @@ def test_paged_kvcache_all_pages_exact():
 
 def test_paged_kvcache_append_flush_and_sparse_selection():
     b, hq, hkv, d, page = 1, 2, 1, 16, 4
-    # intentionally exercises the one-release deprecation shim (private pool)
-    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
-        cache = PagedKVCache.create(batch=b, max_seq=32, page_size=page,
-                                    n_kv_heads=hkv, head_dim=d)
+    cache = PagedKVCache.create(batch=b, max_seq=32, page_size=page,
+                                n_kv_heads=hkv, head_dim=d,
+                                pool=default_pool())
     ks = jax.random.split(jax.random.key(1), 64)
     for t in range(10):
         cache.append(jax.random.normal(ks[2 * t], (b, hkv, d)),

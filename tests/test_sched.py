@@ -100,11 +100,11 @@ def test_prefetcher_issues_ahead_of_consumption(model_and_params):
     runtime most waits find the transfer already complete — the
     store-then-immediately-wait round trip is gone from the decode loop."""
     model, params = model_and_params
-    # intentionally exercises the one-release deprecation shim (private pool)
-    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
-        sched = ContinuousScheduler(
-            model, params,
-            SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, kv_offload=True))
+    pool = default_pool()
+    sched = ContinuousScheduler(
+        model, params,
+        SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, kv_offload=True),
+        pool=pool)
     sched.run(_mixed_trace())
     pf = sched.prefetch_stats()
     assert pf["fetches_issued"] > 0
@@ -113,6 +113,7 @@ def test_prefetcher_issues_ahead_of_consumption(model_and_params):
     assert tr["issued"] == pf["fetches_issued"]
     assert tr["waits_overlapped"] > 0           # overlapped at runtime too
     sched.close()
+    pool.close()
 
 
 def test_temperature_sampling_matches_batch1_engine(model_and_params):
@@ -522,9 +523,9 @@ def test_unadmittable_request_raises(model_and_params):
 
 def test_engine_round_trip_uses_stable_keys(model_and_params):
     model, params = model_and_params
-    # intentionally exercises the one-release deprecation shim (private pool)
-    with pytest.warns(DeprecationWarning, match="HyperOffloadSession"):
-        eng = ServeEngine(model, params, max_seq=MAX_SEQ, offload_kv=True)
+    pool = default_pool()
+    eng = ServeEngine(model, params, max_seq=MAX_SEQ, offload_kv=True,
+                      pool=pool)
     toks = jnp.ones((1, 4), jnp.int32)
     eng.generate({"tokens": toks}, 5)
     snap = eng.pool_stats()
@@ -537,3 +538,4 @@ def test_engine_round_trip_uses_stable_keys(model_and_params):
     assert snap["tier/host"]["entries"] == 0     # released after generate
     eng.close()
     eng.close()   # idempotent
+    pool.close()
