@@ -47,9 +47,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import HyperOffloadSession, OffloadConfig
-from repro.api.config import PrefixCacheConfig
+from repro.api.config import PrefixCacheConfig, TelemetryConfig
 from repro.configs import REGISTRY
 from repro.models.model import build_model
+from repro.obs import OverlapAnalyzer
 from repro.offload.kvcache import worst_case_page_bytes
 from repro.sched import Request, poisson_trace
 from repro.serving.engine import jit_prefill_chunk
@@ -126,6 +127,14 @@ def run_continuous(session, model, params, trace: List[Request], *,
         res["pool_evictions"] = snap["evictions"]
         res["pages_parked"] = sched.stats.pages_parked
         res["cold_spills"] = sched.stats.cold_spills
+        if session.config.telemetry.enable:
+            # the overlap proof: decompose the trace into hidden vs
+            # exposed transfer time, cross-checked against the engine's
+            # own wait counters — a disagreement is a bug, not noise
+            analyzer = OverlapAnalyzer.from_tracer(session.tracer)
+            errs = analyzer.validate(snap["transfer"])
+            assert not errs, f"overlap/TransferStats disagree: {errs}"
+            res["overlap"] = analyzer.report()
     sched.close()
     return res
 
@@ -366,7 +375,8 @@ def main() -> None:
         mode="kv_offload", max_batch=args.max_batch, max_seq=args.max_seq,
         prefill_budget=2,
         device_capacity=max(1, args.max_batch // 2) * row,
-        host_capacity=2 * args.max_batch * row))
+        host_capacity=2 * args.max_batch * row,
+        telemetry=TelemetryConfig(enable=True)))
     offload = run_continuous(off_session, model, params, off_trace,
                              kv_offload=True)
 
@@ -428,6 +438,12 @@ def main() -> None:
           f"issued:{pf['fetches_issued']},"
           f"overlapped:{tr['waits_overlapped']},blocked:{tr['waits_blocked']},"
           f"evictions:{offload['pool_evictions']}")
+    ov = offload["overlap"]
+    hf = ov["hidden_fraction"]
+    print(f"serve_continuous,overlap,transfers:{ov['transfers']},"
+          f"hidden_s:{ov['hidden_s']:.4f},exposed_s:{ov['exposed_s']:.4f},"
+          f"hidden_fraction:"
+          f"{'n/a' if hf is None else format(hf, '.2f')}")
     print(f"serve_continuous,speedup,wall:{speedup:.2f},"
           f"steps:{summary['step_throughput_speedup']:.2f}")
     wl, ck = long_prompts["whole_prompt"], long_prompts["chunked"]

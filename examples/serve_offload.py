@@ -14,6 +14,11 @@ for fetching a fraction of the cache — the paper's NSA trade-off.
 scheduler (``repro.sched``): mixed-length Poisson arrivals served on a
 small slot pool with plan-driven KV prefetch and host-tier eviction of
 cold sequences' pages.
+
+``--trace-out PATH`` turns the session's telemetry on for either demo:
+the overlap summary (hidden vs exposed transfer time, straight from the
+trace) prints at the end and the Chrome trace-event JSON lands at PATH
+(open it at https://ui.perfetto.dev).
 """
 
 import argparse
@@ -23,10 +28,30 @@ import jax
 import jax.numpy as jnp
 
 from repro.api import HyperOffloadSession, OffloadConfig
+from repro.api.config import TelemetryConfig
 from repro.kernels.ref import decode_attention_ref
 
 
-def main():
+def _telemetry(trace_out):
+    return TelemetryConfig(enable=trace_out is not None,
+                           trace_path=trace_out)
+
+
+def _print_overlap(session, trace_out):
+    """Overlap summary from the trace ring (tracing on only)."""
+    ov = session.overlap()
+    if ov is None:
+        return
+    hf = ov["hidden_fraction"]
+    print(f"overlap: {ov['transfers']} transfers, "
+          f"{ov['hidden_s'] * 1e3:.1f} ms hidden / "
+          f"{ov['exposed_s'] * 1e3:.1f} ms exposed "
+          f"(hidden fraction "
+          f"{'n/a' if hf is None else format(hf, '.0%')}); "
+          f"trace → {trace_out}")
+
+
+def main(trace_out=None):
     b, hq, hkv, d = 2, 8, 4, 64
     page, ctx = 32, 512
     scale = d ** -0.5
@@ -38,7 +63,8 @@ def main():
     # spill to the remote tier) — tier topology is config, not a call site
     session = HyperOffloadSession(OffloadConfig(
         mode="paged", max_seq=ctx + 64, page_size=page,
-        host_capacity=2 * n_pages * page_nbytes))
+        host_capacity=2 * n_pages * page_nbytes,
+        telemetry=_telemetry(trace_out)))
     cache = session.paged_kv(batch=b, n_kv_heads=hkv, head_dim=d)
     k_ctx = jax.random.normal(ks[0], (b, ctx, hkv, d))
     v_ctx = jax.random.normal(ks[1], (b, ctx, hkv, d))
@@ -92,10 +118,11 @@ def main():
     print(f"transfer engine: {xfer['issued']} async fetches issued, "
           f"{xfer['waits_overlapped']} fully overlapped, "
           f"{xfer['waits_blocked']} blocked ({xfer['blocked_s'] * 1e3:.1f} ms exposed)")
+    _print_overlap(session, trace_out)
     session.close()
 
 
-def main_continuous():
+def main_continuous(trace_out=None):
     """Continuous-batching scheduler demo: mixed traffic, pool-parked KV."""
     from repro.configs import REGISTRY
     from repro.models.model import build_model
@@ -112,7 +139,8 @@ def main_continuous():
         mode="kv_offload", max_batch=max_batch, max_seq=max_seq,
         prefill_budget=2,
         device_capacity=int(1.5 * row),
-        host_capacity=2 * max_batch * row))
+        host_capacity=2 * max_batch * row,
+        telemetry=_telemetry(trace_out)))
     sched = session.scheduler(model, params)
     trace = poisson_trace(10, rate=0.8, vocab_size=cfg.vocab_size,
                           prompt_lens=(4, 16), new_tokens=(2, 12),
@@ -135,6 +163,7 @@ def main_continuous():
           f"waits overlapped / {xfer['waits_blocked']} blocked")
     lat = sorted(s.t_done - s.request.arrival for s in sched.finished.values())
     print(f"latency (steps): p50 {lat[len(lat) // 2]:.1f}, max {lat[-1]:.1f}")
+    _print_overlap(session, trace_out)
     session.close()   # closes the scheduler and the session-owned pool
 
 
@@ -142,7 +171,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--continuous", action="store_true",
                     help="run the continuous-batching scheduler demo")
-    if ap.parse_args().continuous:
-        main_continuous()
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable telemetry; write the Chrome trace here")
+    args = ap.parse_args()
+    if args.continuous:
+        main_continuous(args.trace_out)
     else:
-        main()
+        main(args.trace_out)

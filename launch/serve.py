@@ -1,0 +1,99 @@
+"""Serving launcher: one continuous-batching serve over a Poisson trace,
+with the telemetry front door exposed as flags.
+
+    PYTHONPATH=src python launch/serve.py [--mode continuous|kv_offload]
+        [--trace-out TRACE.json] [--stats-json STATS.json]
+
+``--trace-out`` enables the session's telemetry block
+(``OffloadConfig.telemetry``) and writes the Chrome trace-event /
+Perfetto JSON file there on session close — open it at
+https://ui.perfetto.dev. ``--stats-json`` writes the merged
+``session.stats()`` snapshot (pool/transfer/sched counters, plus the
+latency histograms and trace-ring state when tracing is on). With
+neither flag the launcher serves exactly as before — telemetry stays
+disabled and no tracer is ever constructed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import HyperOffloadSession, OffloadConfig
+from repro.api.config import TelemetryConfig
+from repro.configs import REGISTRY
+from repro.models.model import build_model
+from repro.offload.kvcache import worst_case_page_bytes
+from repro.sched import poisson_trace
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    ap.add_argument("--mode", choices=("continuous", "kv_offload"),
+                    default="kv_offload")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.8,
+                    help="Poisson arrivals per scheduler step")
+    ap.add_argument("--max-batch", type=int, default=3)
+    ap.add_argument("--max-seq", type=int, default=48)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable telemetry and write the Chrome trace here")
+    ap.add_argument("--stats-json", default=None, metavar="PATH",
+                    help="write the merged session.stats() snapshot here")
+    args = ap.parse_args()
+
+    cfg = REGISTRY[args.arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    kwargs = dict(mode=args.mode, max_batch=args.max_batch,
+                  max_seq=args.max_seq, prefill_budget=2)
+    if args.mode == "kv_offload":
+        # device tier ≈ half the running batch: cold pages spill to host
+        # and prefetch back — the traffic the trace is interesting for
+        row = worst_case_page_bytes(
+            model.cache_specs(1, args.max_seq, jnp.float32))
+        kwargs.update(device_capacity=max(1, args.max_batch // 2) * row,
+                      host_capacity=2 * args.max_batch * row)
+    if args.trace_out is not None:
+        kwargs["telemetry"] = TelemetryConfig(enable=True,
+                                              trace_path=args.trace_out)
+
+    session = HyperOffloadSession(OffloadConfig(**kwargs))
+    sched = session.scheduler(model, params)
+    trace = poisson_trace(args.requests, rate=args.rate,
+                          vocab_size=cfg.vocab_size, prompt_lens=(4, 16),
+                          new_tokens=(2, 12), prompt_quantum=4,
+                          seed=args.seed)
+    t0 = time.time()
+    out = sched.run(trace)
+    wall = time.time() - t0
+    tokens = sum(len(v) for v in out.values())
+    print(f"serve,{args.mode},requests:{len(out)},tokens:{tokens},"
+          f"steps:{sched.stats.steps},wall_s:{wall:.2f}")
+
+    if args.trace_out is not None:
+        ov = session.overlap()
+        hf = ov["hidden_fraction"]
+        print(f"serve,overlap,transfers:{ov['transfers']},"
+              f"hidden_s:{ov['hidden_s']:.4f},"
+              f"exposed_s:{ov['exposed_s']:.4f},hidden_fraction:"
+              f"{'n/a' if hf is None else format(hf, '.2f')}")
+    if args.stats_json is not None:
+        with open(args.stats_json, "w") as f:
+            json.dump(session.stats(), f, indent=2, sort_keys=True,
+                      default=str)
+        print(f"serve,stats,{args.stats_json}")
+    session.close()   # exports the trace to --trace-out (telemetry.trace_path)
+    if args.trace_out is not None:
+        print(f"serve,trace,{args.trace_out}")
+
+
+if __name__ == "__main__":
+    main()

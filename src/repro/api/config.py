@@ -82,6 +82,25 @@ class PrefixCacheConfig:
                 "('device', 'host', 'remote')")
 
 
+@dataclass(frozen=True)
+class TelemetryConfig:
+    """Unified telemetry knobs (``repro.obs``): disabled by default —
+    the session then uses the shared no-op ``NULL_TRACER`` and serving
+    behavior/output is unchanged. Enabling gives the session ONE
+    structured `Tracer` (bounded ring of ``ring_capacity`` events) and
+    per-request latency histograms, shared by every subsystem it hands
+    out; ``trace_path`` (optional) writes the Chrome trace-event /
+    Perfetto JSON file on ``session.close()``."""
+
+    enable: bool = False
+    ring_capacity: int = 65536     # bounded event ring (oldest drop first)
+    trace_path: Optional[str] = None   # export on session close
+
+    def __post_init__(self) -> None:
+        if self.ring_capacity < 1:
+            raise ValueError("telemetry.ring_capacity must be >= 1")
+
+
 def _options_from(cls, d: Dict[str, Any]):
     """Rebuild a frozen options dataclass from a dict, restoring the tuple
     fields JSON flattened into lists. Unknown keys are a hard error — a
@@ -125,6 +144,8 @@ class OffloadConfig:
     cache_dtype: str = "float32"
     # cross-request prefix cache (scheduler modes with chunked prefill)
     prefix_cache: PrefixCacheConfig = field(default_factory=PrefixCacheConfig)
+    # unified telemetry (repro.obs): tracing + metrics, off by default
+    telemetry: TelemetryConfig = field(default_factory=TelemetryConfig)
 
     # -- planner knobs --------------------------------------------------
     insertion: Optional[InsertionOptions] = None   # None → mode default
@@ -237,6 +258,9 @@ class OffloadConfig:
         if isinstance(kwargs.get("prefix_cache"), dict):
             kwargs["prefix_cache"] = _options_from(PrefixCacheConfig,
                                                    kwargs["prefix_cache"])
+        if isinstance(kwargs.get("telemetry"), dict):
+            kwargs["telemetry"] = _options_from(TelemetryConfig,
+                                                kwargs["telemetry"])
         return cls(**kwargs)
 
     def replace(self, **changes) -> "OffloadConfig":

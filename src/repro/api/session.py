@@ -46,6 +46,7 @@ from repro.core.insertion import PAGED_INSERTION
 from repro.core.ir import Graph
 from repro.core.jax_exec import PlanExecutor
 from repro.core.planner import HyperOffloadPlanner, OffloadPlan
+from repro.obs import NULL_TRACER, MetricsRegistry, OverlapAnalyzer, Tracer
 from repro.offload.kvcache import PagedKVCache
 from repro.pool import MemoryPoolManager, default_pool
 from repro.prefix import PrefixCacheManager
@@ -53,6 +54,18 @@ from repro.sched.scheduler import ContinuousScheduler, SchedulerConfig
 from repro.serving.engine import ServeEngine
 from repro.training.step import TrainStepConfig, make_train_step
 from repro.training.step import init_train_state as _init_train_state
+
+
+def _weighted_plan_lead(pairs: List[tuple]) -> float:
+    """Session-level mean plan lead over (prefetch steps, per-scheduler
+    mean lead) pairs, weighted by step count — an idle one-step scheduler
+    must not skew the session figure the way an unweighted mean of means
+    does. Falls back to the unweighted mean when no scheduler has stepped
+    yet (all weights zero)."""
+    total = sum(steps for steps, _ in pairs)
+    if total > 0:
+        return sum(steps * lead for steps, lead in pairs) / total
+    return sum(lead for _, lead in pairs) / len(pairs)
 
 
 class HyperOffloadSession:
@@ -64,6 +77,13 @@ class HyperOffloadSession:
                  pool: Optional[MemoryPoolManager] = None) -> None:
         self.config = config if config is not None else OffloadConfig()
         c = self.config
+        # ONE tracer + ONE metrics registry per session, shared by every
+        # subsystem it hands out (repro.obs). The registry always exists —
+        # stats() is a registry snapshot either way; the tracer is the
+        # shared no-op NULL_TRACER unless telemetry is enabled.
+        self.registry = MetricsRegistry()
+        self.tracer = (Tracer(capacity=c.telemetry.ring_capacity)
+                       if c.telemetry.enable else NULL_TRACER)
         self._owns_pool = pool is None
         if pool is None:
             pool = default_pool(
@@ -72,7 +92,10 @@ class HyperOffloadSession:
                 remote_capacity=c.remote_capacity,
                 device=device,
                 transfer_depth=c.depth_for(),
-                transfer_workers=c.transfer_workers)
+                transfer_workers=c.transfer_workers,
+                tracer=self.tracer if c.telemetry.enable else None)
+        elif c.telemetry.enable:
+            pool.set_tracer(self.tracer)
         self.pool = pool
         self.transfer = pool.transfer
         if c.transfer_depth != "auto":
@@ -92,8 +115,70 @@ class HyperOffloadSession:
             pc = c.prefix_cache
             self.prefix_cache = PrefixCacheManager(
                 self.pool, page_size=pc.page_size, max_pages=pc.max_pages,
-                min_match_pages=pc.min_match_pages, pin_tier=pc.pin_tier)
+                min_match_pages=pc.min_match_pages, pin_tier=pc.pin_tier,
+                tracer=self.tracer)
+        self._register_collectors()
         self._closed = False
+
+    def _register_collectors(self) -> None:
+        """Re-home the subsystem stats snapshots onto the registry: each
+        legacy counter block (`PoolStats`/`TransferStats` via the pool
+        snapshot, `ServeStats`, `SchedStats`+prefetch, paged, prefix)
+        becomes a named collector, and ``stats()`` is the registry's
+        ``collect()``. Registration order is the stats() key order."""
+        reg = self.registry
+        reg.register_collector("mode", lambda: self.config.mode)
+        reg.register_collector("pool", lambda: self.pool.snapshot())
+        reg.register_collector("serve", self._collect_serve)
+        reg.register_collector("sched", self._collect_sched)
+        reg.register_collector("paged", self._collect_paged)
+        reg.register_collector(
+            "prefix", lambda: None if self.prefix_cache is None
+            else self.prefix_cache.snapshot())
+        reg.register_collector("plans_cached",
+                               lambda: len(self._plan_cache))
+
+    def _collect_serve(self) -> Dict[str, Any]:
+        serve = {"engines": len(self._engines), "prefill_tokens": 0,
+                 "decoded_tokens": 0, "cache_round_trips": 0}
+        for e in self._engines:
+            serve["prefill_tokens"] += e.stats.prefill_tokens
+            serve["decoded_tokens"] += e.stats.decoded_tokens
+            serve["cache_round_trips"] += e.stats.cache_round_trips
+        return serve
+
+    def _collect_sched(self) -> Dict[str, Any]:
+        sched = {"schedulers": len(self._schedulers), "steps": 0, "joins": 0,
+                 "retires": 0, "prefill_tokens": 0, "prefill_chunks": 0,
+                 "decoded_tokens": 0, "pages_parked": 0, "cold_spills": 0,
+                 "prefix_hits": 0, "prefix_hit_tokens": 0,
+                 "admission_blocked": 0}
+        prefetch = {"steps": 0, "fetches_issued": 0, "layers_planned": 0}
+        leads: List[tuple] = []
+        for s in self._schedulers:
+            for k in ("steps", "joins", "retires", "prefill_tokens",
+                      "prefill_chunks", "decoded_tokens", "pages_parked",
+                      "cold_spills", "prefix_hits", "prefix_hit_tokens"):
+                sched[k] += getattr(s.stats, k)
+            sched["admission_blocked"] += s.admission.blocked
+            pf = s.prefetch_stats()
+            if pf is not None:
+                for k in ("steps", "fetches_issued", "layers_planned"):
+                    prefetch[k] += int(pf[k])
+                leads.append((int(pf["steps"]), pf["mean_plan_lead"]))
+        if leads:
+            prefetch["mean_plan_lead"] = _weighted_plan_lead(leads)
+        sched["prefetch"] = prefetch
+        return sched
+
+    def _collect_paged(self) -> Dict[str, Any]:
+        paged = {"caches": len(self._paged), "fetches": 0, "flushes": 0,
+                 "tokens": 0}
+        for p in self._paged:
+            paged["fetches"] += p.fetches
+            paged["flushes"] += p.flushes
+            paged["tokens"] += p.length
+        return paged
 
     # -- planning -------------------------------------------------------
     def plan(self, graph: Graph, *, key: Optional[Any] = None,
@@ -123,7 +208,7 @@ class HyperOffloadSession:
             max_seq=self.config.max_seq if max_seq is None else max_seq,
             cache_dtype=cache_dtype if cache_dtype is not None
             else self.config.dtype,
-            offload_kv=offload, pool=self.pool)
+            offload_kv=offload, pool=self.pool, tracer=self.tracer)
         self._engines.append(engine)
         return engine
 
@@ -153,9 +238,11 @@ class HyperOffloadSession:
             cfg = SchedulerConfig(**base)
         elif overrides:
             raise TypeError("pass either cfg or field overrides, not both")
-        sched = ContinuousScheduler(model, params, cfg, pool=self.pool,
-                                    plan_cache=self._plan_cache,
-                                    prefix_cache=self.prefix_cache)
+        sched = ContinuousScheduler(
+            model, params, cfg, pool=self.pool,
+            plan_cache=self._plan_cache, prefix_cache=self.prefix_cache,
+            tracer=self.tracer,
+            metrics=self.registry if c.telemetry.enable else None)
         self._schedulers.append(sched)
         return sched
 
@@ -212,58 +299,50 @@ class HyperOffloadSession:
     def stats(self) -> Dict[str, Any]:
         """One merged snapshot: pool (incl. transfer + per-tier occupancy)
         plus aggregated serve/sched/paged counters across every subsystem
-        this session handed out."""
-        serve = {"engines": len(self._engines), "prefill_tokens": 0,
-                 "decoded_tokens": 0, "cache_round_trips": 0}
-        for e in self._engines:
-            serve["prefill_tokens"] += e.stats.prefill_tokens
-            serve["decoded_tokens"] += e.stats.decoded_tokens
-            serve["cache_round_trips"] += e.stats.cache_round_trips
+        this session handed out. Implemented as the session registry's
+        ``collect()`` (the legacy stats blocks are registered collectors),
+        so the shape is identical whether telemetry is on or off — with
+        telemetry on, one extra ``"telemetry"`` key carries the latency
+        histograms and the trace-ring state."""
+        out = self.registry.collect()
+        if self.config.telemetry.enable:
+            out["telemetry"] = {
+                "histograms": self.registry.snapshot(),
+                "trace": self.tracer.snapshot(),
+            }
+        return out
 
-        sched = {"schedulers": len(self._schedulers), "steps": 0, "joins": 0,
-                 "retires": 0, "prefill_tokens": 0, "prefill_chunks": 0,
-                 "decoded_tokens": 0, "pages_parked": 0, "cold_spills": 0,
-                 "prefix_hits": 0, "prefix_hit_tokens": 0,
-                 "admission_blocked": 0}
-        prefetch = {"steps": 0, "fetches_issued": 0, "layers_planned": 0}
-        leads: List[float] = []
-        for s in self._schedulers:
-            for k in ("steps", "joins", "retires", "prefill_tokens",
-                      "prefill_chunks", "decoded_tokens", "pages_parked",
-                      "cold_spills", "prefix_hits", "prefix_hit_tokens"):
-                sched[k] += getattr(s.stats, k)
-            sched["admission_blocked"] += s.admission.blocked
-            pf = s.prefetch_stats()
-            if pf is not None:
-                for k in ("steps", "fetches_issued", "layers_planned"):
-                    prefetch[k] += int(pf[k])
-                leads.append(pf["mean_plan_lead"])
-        if leads:
-            prefetch["mean_plan_lead"] = sum(leads) / len(leads)
-        sched["prefetch"] = prefetch
+    def stats_text(self) -> str:
+        """Prometheus-style text exposition of the same snapshot: the
+        registry's typed instruments (request-latency histograms) plus the
+        flattened collector counters."""
+        return self.registry.render_prometheus()
 
-        paged = {"caches": len(self._paged), "fetches": 0, "flushes": 0,
-                 "tokens": 0}
-        for p in self._paged:
-            paged["fetches"] += p.fetches
-            paged["flushes"] += p.flushes
-            paged["tokens"] += p.length
+    def overlap(self) -> Optional[Dict[str, Any]]:
+        """`OverlapAnalyzer` report (hidden vs exposed transfer time per
+        tier pair and per scheduler step) over the current trace ring, or
+        ``None`` when telemetry is disabled."""
+        if not self.config.telemetry.enable:
+            return None
+        return OverlapAnalyzer.from_tracer(self.tracer).report()
 
-        return {
-            "mode": self.config.mode,
-            "pool": self.pool.snapshot(),
-            "serve": serve,
-            "sched": sched,
-            "paged": paged,
-            "prefix": None if self.prefix_cache is None
-            else self.prefix_cache.snapshot(),
-            "plans_cached": len(self._plan_cache),
-        }
+    def export_trace(self, path: str) -> None:
+        """Write the trace ring as a Chrome trace-event / Perfetto JSON
+        file. Raises when telemetry is disabled — there is nothing to
+        export and silently writing an empty trace would mask the
+        misconfiguration."""
+        if not self.config.telemetry.enable:
+            raise RuntimeError(
+                "export_trace requires config.telemetry.enable")
+        self.tracer.export(path)
 
     # -- lifecycle ------------------------------------------------------
     def close(self) -> None:
         """Idempotent: shut down every subsystem, then the pool (if owned).
-        Subsystems never close the shared pool themselves."""
+        Subsystems never close the shared pool themselves. With
+        ``telemetry.trace_path`` set, the trace ring is exported there
+        before teardown (the drain in ``pool.close`` emits no new spans
+        the consumer could still be interested in)."""
         if self._closed:
             return
         self._closed = True
@@ -273,6 +352,9 @@ class HyperOffloadSession:
             e.close()
         if self.prefix_cache is not None:
             self.prefix_cache.close()
+        tp = self.config.telemetry.trace_path
+        if self.config.telemetry.enable and tp is not None:
+            self.tracer.export(tp)
         if self._owns_pool:
             self.pool.close()
 

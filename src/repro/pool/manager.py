@@ -23,6 +23,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs.trace import NULL_TRACER
 from repro.pool import backend as B
 from repro.pool.transfer import TransferEngine, TransferHandle
 
@@ -70,13 +71,17 @@ class PoolStats:
 
 class MemoryPoolManager:
     def __init__(self, tiers: Sequence[TierState],
-                 transfer: Optional[TransferEngine] = None) -> None:
+                 transfer: Optional[TransferEngine] = None,
+                 tracer=None) -> None:
         if not tiers:
             raise ValueError("need at least one tier")
         self.tiers: Dict[str, TierState] = {t.name: t for t in tiers}
         self.spill_order: List[str] = [t.name for t in tiers]
         self.entries: Dict[str, PoolEntry] = {}
         self.transfer = transfer or TransferEngine()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if tracer is not None:
+            self.transfer.set_tracer(tracer)
         self.stats = PoolStats()
         self._clock = 0
         self._lock = threading.RLock()
@@ -85,12 +90,19 @@ class MemoryPoolManager:
         self._reservations: Dict[str, Tuple[int, Tuple[str, ...], Optional[str]]] = {}
         self._evict_listeners: List[Callable[[PoolEntry, str], None]] = []
 
+    def set_tracer(self, tracer) -> None:
+        """Attach/replace the tracer on the pool AND its transfer engine
+        (the session wires its telemetry into an injected pool here)."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.transfer.set_tracer(tracer)
+
     # -- storing -------------------------------------------------------
     def put(self, key: str, value, tier: str = B.HOST_TIER, *,
             priority: float = 0.0, pinned: bool = False) -> PoolEntry:
         """Store ``value`` into ``tier``, evicting (spilling down-hierarchy)
         as needed. Re-putting an existing key replaces it; if the new value
         doesn't fit, the old entry survives untouched."""
+        t0 = self.tracer.now() if self.tracer.enabled else 0.0
         with self._lock:
             st = self._tier(tier)
             nbytes = int(value.nbytes)
@@ -114,11 +126,16 @@ class MemoryPoolManager:
             st.peak = max(st.peak, st.used)
             self.stats.puts += 1
             self.stats.bytes_stored += nbytes
+            if self.tracer.enabled:
+                self.tracer.complete("pool", "put", t0, self.tracer.now() - t0,
+                                     {"key": key, "tier": tier,
+                                      "nbytes": nbytes})
             return entry
 
     # -- fetching ------------------------------------------------------
     def get(self, key: str):
         """Materialize the entry on device (synchronous)."""
+        t0 = self.tracer.now() if self.tracer.enabled else 0.0
         with self._lock:
             entry = self.entries[key]
             self._clock += 1
@@ -126,14 +143,21 @@ class MemoryPoolManager:
             self.stats.gets += 1
             self.stats.bytes_fetched += entry.nbytes
             backend, handle = self._tier(entry.tier).backend, entry.handle
-        return backend.get(handle)
+        value = backend.get(handle)
+        if self.tracer.enabled:
+            self.tracer.complete("pool", "fetch", t0, self.tracer.now() - t0,
+                                 {"key": key, "tier": entry.tier,
+                                  "nbytes": entry.nbytes})
+        return value
 
     def prefetch(self, key: str) -> TransferHandle:
         """Issue an async device fetch through the transfer engine; the
-        returned handle's ``wait()`` yields the device array."""
+        returned handle's ``wait()`` yields the device array. The source
+        tier rides along as trace metadata (per-tier-pair overlap)."""
         with self._lock:
             entry = self.entries[key]   # fail fast on unknown keys
             backend, handle = self._tier(entry.tier).backend, entry.handle
+            src = entry.tier
 
         def fetch():
             with self._lock:
@@ -143,7 +167,8 @@ class MemoryPoolManager:
                 self.stats.bytes_fetched += entry.nbytes
             return backend.get(handle)
 
-        return self.transfer.submit(fetch, key=key)
+        return self.transfer.submit(fetch, key=key, src=src,
+                                    dst=B.DEVICE_TIER)
 
     # -- bookkeeping ---------------------------------------------------
     def close(self) -> None:
@@ -334,6 +359,10 @@ class MemoryPoolManager:
         entry.tier = dst
         self.stats.evictions += 1
         self.stats.bytes_evicted += entry.nbytes
+        if self.tracer.enabled:
+            self.tracer.instant("pool", "spill",
+                                {"key": entry.key, "src": src_st.name,
+                                 "dst": dst, "nbytes": entry.nbytes})
         for cb in self._evict_listeners:
             cb(entry, dst)
 
@@ -347,7 +376,8 @@ def default_pool(host_capacity: Optional[int] = None,
                  device=None,
                  transfer: Optional[TransferEngine] = None, *,
                  transfer_depth: Optional[int] = None,
-                 transfer_workers: int = 2) -> MemoryPoolManager:
+                 transfer_workers: int = 2,
+                 tracer=None) -> MemoryPoolManager:
     """The standard three-tier pool: device HBM → host → simulated remote.
 
     ``transfer_depth``/``transfer_workers`` build the engine here so callers
@@ -360,4 +390,4 @@ def default_pool(host_capacity: Optional[int] = None,
         TierState(B.HOST_TIER, B.make_host_backend(device), host_capacity),
         TierState(B.REMOTE_TIER, B.NumpyHostBackend(device), remote_capacity),
     ]
-    return MemoryPoolManager(tiers, transfer=transfer)
+    return MemoryPoolManager(tiers, transfer=transfer, tracer=tracer)

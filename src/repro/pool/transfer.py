@@ -12,6 +12,14 @@ prefetcher cannot flood host bandwidth or pile up staging buffers.
 Stats distinguish waits that found the transfer already complete (fully
 overlapped) from waits that blocked (exposed transfer time) — the runtime
 counterpart of ``Timeline.exposed_comm``.
+
+With a tracer attached (``repro.obs``) every handle additionally emits two
+trace spans: ``transfer`` (issue → complete, tagged with its source/
+destination tiers) from the worker thread, and ``transfer.wait`` (first
+consumer wait, tagged hit/blocked) from the consumer — the raw material
+``obs.OverlapAnalyzer`` decomposes into hidden vs exposed transfer time.
+The wait span's duration is the *same measurement* added to ``blocked_s``,
+so trace and counters can be cross-validated exactly.
 """
 
 from __future__ import annotations
@@ -22,6 +30,8 @@ from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, Optional
+
+from repro.obs.trace import NULL_TRACER
 
 #: floor for the auto depth policy — always enough for classic double
 #: buffering plus a few leaves of headroom
@@ -91,14 +101,21 @@ class TransferHandle:
         return self._future.done()
 
     def wait(self) -> Any:
-        """Idempotent; only the first wait is charged to the stats, so
-        re-waiting (or an engine-internal retirement) never double-counts."""
+        """Idempotent; only the first wait is charged to the stats (and
+        traced), so re-waiting (or an engine-internal retirement) never
+        double-counts."""
         was_done = self._future.done()
         t0 = time.perf_counter()
         value = self._future.result()
         if not self._waited:
             self._waited = True
-            self._engine._record_wait(was_done, time.perf_counter() - t0)
+            dur = time.perf_counter() - t0
+            self._engine._record_wait(was_done, dur)
+            tracer = self._engine.tracer
+            if tracer.enabled:
+                tracer.complete("transfer", "transfer.wait", t0, dur,
+                                {"seq": self.seq, "key": self.key,
+                                 "hit": was_done})
         return value
 
     def __repr__(self) -> str:
@@ -107,7 +124,8 @@ class TransferHandle:
 
 
 class TransferEngine:
-    def __init__(self, depth: int = 2, workers: int = 2) -> None:
+    def __init__(self, depth: int = 2, workers: int = 2,
+                 tracer=None) -> None:
         if depth < 1:
             raise ValueError("depth must be >= 1")
         self.depth = depth
@@ -118,6 +136,12 @@ class TransferEngine:
         self._lock = threading.Lock()
         self._seq = 0
         self.stats = TransferStats()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+
+    def set_tracer(self, tracer) -> None:
+        """Attach/replace the tracer (the session wires its telemetry into
+        an injected engine after construction)."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     def ensure_depth(self, depth: int) -> None:
         """Raise the in-flight bound to at least ``depth`` (never lowers).
@@ -131,28 +155,40 @@ class TransferEngine:
                 self.depth = max(self.depth, int(depth))
 
     # ------------------------------------------------------------------
-    def submit(self, fn: Callable[[], Any], key: Optional[str] = None
-               ) -> TransferHandle:
+    def submit(self, fn: Callable[[], Any], key: Optional[str] = None, *,
+               src: Optional[str] = None,
+               dst: Optional[str] = None) -> TransferHandle:
         """Issue ``fn`` (a transfer thunk) asynchronously. Blocks on the
         oldest outstanding transfer first when the pipeline is full —
         charged to backpressure stats, not consumer-exposed time (the
         consumer's own later wait() on that handle still counts normally).
-        Thread-safe: concurrent submitters share the depth bound."""
-
-        def run():
-            try:
-                return fn()
-            finally:
-                with self._lock:
-                    self.stats.completed += 1
-
+        Thread-safe: concurrent submitters share the depth bound.
+        ``src``/``dst`` name the tiers the bytes move between — trace
+        metadata only (the overlap analyzer's per-tier-pair breakdown)."""
         while True:
             with self._lock:
                 self._reap_locked()
                 if len(self._in_flight) < self.depth:
                     self._seq += 1
+                    seq = self._seq
                     self.stats.issued += 1
-                    handle = TransferHandle(key, self._seq,
+                    t_issue = time.perf_counter()
+
+                    def run():
+                        try:
+                            return fn()
+                        finally:
+                            t_done = time.perf_counter()
+                            with self._lock:
+                                self.stats.completed += 1
+                            if self.tracer.enabled:
+                                self.tracer.complete(
+                                    "transfer", "transfer", t_issue,
+                                    t_done - t_issue,
+                                    {"seq": seq, "key": key,
+                                     "src": src, "dst": dst})
+
+                    handle = TransferHandle(key, seq,
                                             self._pool.submit(run), self)
                     self._in_flight.append(handle)
                     self.stats.max_in_flight = max(self.stats.max_in_flight,
@@ -167,9 +203,13 @@ class TransferEngine:
                 oldest._future.result()
             except Exception:
                 pass
+            dur = time.perf_counter() - t0
             with self._lock:
                 self.stats.backpressure_waits += 1
-                self.stats.backpressure_s += time.perf_counter() - t0
+                self.stats.backpressure_s += dur
+            if self.tracer.enabled:
+                self.tracer.complete("transfer", "transfer.backpressure",
+                                     t0, dur, {"stalled_on": oldest.seq})
 
     def drain(self) -> None:
         """Retire every outstanding transfer. Failed transfers don't stop

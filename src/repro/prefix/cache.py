@@ -47,6 +47,7 @@ from typing import Callable, Dict, List, Mapping, Optional
 
 import numpy as np
 
+from repro.obs import NULL_TRACER
 from repro.pool import DEVICE_TIER, HOST_TIER
 from repro.pool.manager import MemoryPoolManager, PoolCapacityError, PoolEntry
 from repro.prefix.index import PrefixNode, RadixPrefixIndex
@@ -109,7 +110,7 @@ class PrefixCacheManager:
 
     def __init__(self, pool: MemoryPoolManager, *, page_size: int,
                  max_pages: Optional[int] = None, min_match_pages: int = 1,
-                 pin_tier: str = HOST_TIER) -> None:
+                 pin_tier: str = HOST_TIER, tracer=None) -> None:
         if max_pages is not None and max_pages < 1:
             raise ValueError("max_pages must be >= 1 (or None = unbounded)")
         if min_match_pages < 1:
@@ -124,6 +125,7 @@ class PrefixCacheManager:
         self.pin_tier = pin_tier
         self.index = RadixPrefixIndex(page_size)
         self.stats = PrefixCacheStats()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._ns = f"pfx{next(_PREFIX_IDS)}"
         self._owner: Dict[str, PrefixNode] = {}   # pool key -> owning node
         self._floor = pool.spill_order.index(pin_tier)
@@ -165,6 +167,9 @@ class PrefixCacheManager:
         chain = self.index.match(tokens, max_pages)
         if len(chain) < self.min_match_pages:
             self.stats.misses += 1
+            if self.tracer.enabled:
+                self.tracer.instant("prefix", "lookup",
+                                    {"hit": False, "pages": 0})
             return None
         for node in chain:
             node.refs += 1
@@ -175,6 +180,11 @@ class PrefixCacheManager:
         self.stats.hits += 1
         self.stats.hit_pages += len(chain)
         self.stats.hit_tokens += len(chain) * self.page_size
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "prefix", "lookup",
+                {"hit": True, "pages": len(chain),
+                 "tokens": len(chain) * self.page_size})
         return PrefixHit(nodes=chain, page_size=self.page_size)
 
     def release(self, hit: PrefixHit) -> None:
@@ -241,6 +251,9 @@ class PrefixCacheManager:
             added += 1
             self.stats.donated_pages += 1
         self._flush_deferred()
+        if self.tracer.enabled:
+            self.tracer.instant("prefix", "donate",
+                                {"pages": added, "offered": n_pages})
         return added
 
     # -- internals -----------------------------------------------------
@@ -297,6 +310,9 @@ class PrefixCacheManager:
                 self._deferred_drops.append(key)
             n.entries.clear()
         self.stats.invalidations += len(removed)
+        if self.tracer.enabled:
+            self.tracer.instant("prefix", "invalidate",
+                                {"pages": len(removed), "below": dst})
 
     def _flush_deferred(self) -> None:
         while self._deferred_drops:

@@ -32,6 +32,7 @@ from repro.core.costmodel import HardwareSpec, TPU_V5E
 from repro.core.insertion import PAGED_INSERTION, InsertionOptions
 from repro.core.planner import HyperOffloadPlanner, OffloadPlan
 from repro.core.tracer import TraceOptions, trace_decode_step
+from repro.obs.trace import NULL_TRACER
 from repro.pool.manager import MemoryPoolManager
 from repro.pool.transfer import TransferHandle
 
@@ -78,8 +79,10 @@ class PlanPrefetcher:
                  pool: MemoryPoolManager, hw: HardwareSpec = TPU_V5E,
                  refine: bool = True,
                  insert_opts: Optional[InsertionOptions] = None,
-                 plan_cache: Optional[Dict[Any, OffloadPlan]] = None) -> None:
+                 plan_cache: Optional[Dict[Any, OffloadPlan]] = None,
+                 tracer=None) -> None:
         self.pool = pool
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # insertion options come from the session/config; the fallback is
         # the documented paged default (min_bytes=1 — the mandatory prefetch
         # of every pool-resident KV tensor must be planned even for
@@ -123,6 +126,7 @@ class PlanPrefetcher:
         whose pages the caller didn't name are skipped — e.g. empty slots).
         Returns the in-flight handles grouped in consumption order."""
         issued: Dict[int, List[Tuple[str, TransferHandle]]] = {}
+        t0 = self.tracer.now() if self.tracer.enabled else 0.0
         for layer in self.issue_order:
             pairs = [(k, self.pool.prefetch(k))
                      for k in keys_by_layer.get(layer, ())]
@@ -130,5 +134,10 @@ class PlanPrefetcher:
                 issued[layer] = pairs
                 self.stats.fetches_issued += len(pairs)
         self.stats.steps += 1
+        if self.tracer.enabled:
+            self.tracer.complete(
+                "sched", "prefetch_issue", t0, self.tracer.now() - t0,
+                {"fetches": sum(len(p) for p in issued.values()),
+                 "layers": len(issued)})
         by_layer = [(l, issued[l]) for l in self.consumption_order if l in issued]
         return InFlightFetches(by_layer=by_layer)

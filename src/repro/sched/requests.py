@@ -92,6 +92,7 @@ class RequestState:
     reserve_key: str = ""              # pool reservation handle
     last_step: int = -1                # last scheduler step that decoded us
     joined_step: int = -1
+    t_joined: Optional[float] = None   # admission time (queue-wait metric)
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
 

@@ -57,6 +57,8 @@ import numpy as np
 from repro.core.costmodel import HardwareSpec, TPU_V5E
 from repro.core.insertion import InsertionOptions
 from repro.models.model import Model
+from repro.obs.metrics import STEP_BUCKETS, MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.offload.kvcache import KVPageTable, worst_case_page_bytes
 from repro.pool import (
     DEVICE_TIER, MemoryPoolManager, auto_depth, default_pool,
@@ -114,13 +116,31 @@ class ContinuousScheduler:
                  cfg: SchedulerConfig = SchedulerConfig(), *,
                  pool: Optional[MemoryPoolManager] = None,
                  plan_cache: Optional[Dict[Any, Any]] = None,
-                 prefix_cache: Optional[PrefixCacheManager] = None) -> None:
+                 prefix_cache: Optional[PrefixCacheManager] = None,
+                 tracer=None,
+                 metrics: Optional[MetricsRegistry] = None) -> None:
         self.model = model
         self.params = params
         self.cfg = cfg
         self._ns = f"sched{next(_SCHED_IDS)}"
         self.stats = SchedStats()
         self.finished: Dict[int, RequestState] = {}
+        self._tracer = tracer if tracer is not None else NULL_TRACER
+        # per-request latency histograms (virtual scheduler steps), shared
+        # across a session's schedulers via the one registry
+        self._metrics = metrics
+        if metrics is not None:
+            self._h_ttft = metrics.histogram(
+                "req_ttft_steps", STEP_BUCKETS,
+                "request arrival to first token, scheduler steps")
+            self._h_queue_wait = metrics.histogram(
+                "req_queue_wait_steps", STEP_BUCKETS,
+                "request arrival to admission, scheduler steps")
+            self._h_tpot = metrics.histogram(
+                "req_time_per_output_token_steps",
+                (0.25, 0.5, 1, 2, 4, 8, 16, 32),
+                "mean per-output-token latency after the first token, "
+                "scheduler steps")
 
         if cfg.chunk_size is not None:
             if not 1 <= cfg.chunk_size <= cfg.max_seq:
@@ -181,7 +201,7 @@ class ContinuousScheduler:
             self.prefetcher = PlanPrefetcher(
                 model.cfg, cfg.max_batch, cfg.max_seq, pool=self.pool,
                 hw=cfg.hw, refine=cfg.refine, insert_opts=cfg.insert_opts,
-                plan_cache=plan_cache)
+                plan_cache=plan_cache, tracer=self._tracer)
             self.pool.add_evict_listener(self._on_evict)
         self.prefix_cache = prefix_cache
         if prefix_cache is not None:
@@ -210,6 +230,11 @@ class ContinuousScheduler:
             raise ValueError(
                 f"request {request.req_id}: prompt+decode "
                 f"{request.total_len} exceeds max_seq {self.cfg.max_seq}")
+        if self._tracer.enabled:
+            self._tracer.instant("request", "QUEUED",
+                                 {"req": request.req_id,
+                                  "prompt_len": request.prompt_len,
+                                  "arrival": request.arrival})
         return self.queue.push(request)
 
     @property
@@ -457,12 +482,13 @@ class ContinuousScheduler:
             return
         prio = float(state.request.max_new_tokens
                      + state.request.prompt_len - state.prefill_pos)
-        for i, (si, ri, pi) in enumerate(self._flat):
-            leaves = jax.tree.leaves(row["segments"][si][f"p{pi}"])
-            for j, leaf in enumerate(leaves):
-                state.pages.park(f"L{i}.{j}", leaf[ri, 0], DEVICE_TIER,
-                                 priority=prio)
-                self.stats.pages_parked += 1
+        with self._tracer.span("sched", "park_row", req=state.req_id):
+            for i, (si, ri, pi) in enumerate(self._flat):
+                leaves = jax.tree.leaves(row["segments"][si][f"p{pi}"])
+                for j, leaf in enumerate(leaves):
+                    state.pages.park(f"L{i}.{j}", leaf[ri, 0], DEVICE_TIER,
+                                     priority=prio)
+                    self.stats.pages_parked += 1
         state.chunk_cache = None
 
     def _restore_chunk_row(self, state: RequestState) -> Any:
@@ -474,6 +500,10 @@ class ContinuousScheduler:
         if state.chunk_cache is not None:
             row, state.chunk_cache = state.chunk_cache, None
             return row
+        with self._tracer.span("sched", "restore_row", req=state.req_id):
+            return self._restore_parked_row(state)
+
+    def _restore_parked_row(self, state: RequestState) -> Any:
         row = self.model.init_cache(1, self.cfg.max_seq, self.cfg.cache_dtype)
         keys_by_layer: Dict[int, List[str]] = {}
         for i, (si, ri, pi) in enumerate(self._flat):
@@ -506,10 +536,14 @@ class ContinuousScheduler:
         state.slot = slot
         self.slots[slot] = state
         state.joined_step = self.stats.steps
+        state.t_joined = self.now
         if self.cfg.kv_offload:   # resident mode never parks a page
             state.pages = KVPageTable(
                 self.pool, f"{self._ns}/req{state.req_id}")
         self.stats.joins += 1
+        if self._tracer.enabled:
+            self._tracer.instant("request", "PREFILL",
+                                 {"req": state.req_id, "slot": slot})
 
     def _finish_prefill(self, state: RequestState, logits: jax.Array,
                         row: Any) -> Tuple[int, int]:
@@ -533,6 +567,8 @@ class ContinuousScheduler:
         state.t_first_token = self.now
         state.status = DECODE
         state.last_step = self.stats.steps
+        if self._tracer.enabled:
+            self._tracer.instant("request", "DECODE", {"req": req.req_id})
         if state.done:                # max_new_tokens == 1
             self._retire(state)
         return (req.req_id, tok)
@@ -584,6 +620,18 @@ class ContinuousScheduler:
     def _retire(self, state: RequestState) -> None:
         state.status = DONE
         state.t_done = self.now
+        arrival = state.request.arrival
+        if self._metrics is not None:
+            self._h_ttft.observe(state.t_first_token - arrival)
+            self._h_queue_wait.observe(state.t_joined - arrival)
+            self._h_tpot.observe((state.t_done - state.t_first_token)
+                                 / max(len(state.out) - 1, 1))
+        if self._tracer.enabled:
+            self._tracer.instant("request", "DONE",
+                                 {"req": state.req_id,
+                                  "tokens": len(state.out),
+                                  "ttft_steps": state.t_first_token - arrival,
+                                  "latency_steps": state.t_done - arrival})
         if self.prefix_cache is not None:
             self._donate_prefix(state)
             if state.prefix_hit is not None:
@@ -657,12 +705,21 @@ class ContinuousScheduler:
         and this step's wait, so the transfers it overlaps are real. A
         newly admitted slot was free when the fetches were issued, so the
         joiner's freshly scattered rows are never clobbered by collect."""
-        emitted = self._admit_and_prefill()
-        if self._inflight is not None:
-            self._collect_inflight()
-        emitted += self._decode_active()
-        if self.cfg.kv_offload:
-            self._park_and_issue()
+        tr = self._tracer
+        with tr.span("sched", "step", step=self.stats.steps):
+            with tr.span("sched", "admit_prefill"):
+                emitted = self._admit_and_prefill()
+            if self._inflight is not None:
+                # waits on the previous step's plan-driven fetches happen
+                # here — the overlap analyzer charges their exposure to
+                # this step's span
+                with tr.span("sched", "collect"):
+                    self._collect_inflight()
+            with tr.span("sched", "decode"):
+                emitted += self._decode_active()
+            if self.cfg.kv_offload:
+                with tr.span("sched", "park_issue"):
+                    self._park_and_issue()
         self.stats.steps += 1
         self.now += 1.0
         return emitted

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model
+from repro.obs import NULL_TRACER
 from repro.pool import HOST_TIER, MemoryPoolManager, auto_depth
 from repro.serving.sampling import sample_token
 
@@ -73,8 +74,10 @@ def jit_prefill_chunk(model: Model):
 class ServeEngine:
     def __init__(self, model: Model, params: Any, *, max_seq: int,
                  cache_dtype=jnp.float32, offload_kv: bool = False,
-                 pool: Optional[MemoryPoolManager] = None) -> None:
+                 pool: Optional[MemoryPoolManager] = None,
+                 tracer=None) -> None:
         self.model = model
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.params = params
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
@@ -118,16 +121,18 @@ class ServeEngine:
         Leaf keys are stable across steps — a re-``put`` replaces the old
         entry in place, so the decode loop causes zero key churn (no
         put/drop pairs, no LRU-clock noise from dropped entries)."""
-        leaves, treedef = jax.tree.flatten(cache)
-        while len(self._kv_keys) < len(leaves):
-            self._kv_keys.append(f"{self._key_ns}/kv{len(self._kv_keys)}")
-        keys = self._kv_keys[:len(leaves)]
-        for k, leaf in zip(keys, leaves):
-            self.pool.put(k, leaf, HOST_TIER)
-        handles = [self.pool.prefetch(k) for k in keys]
-        self.stats.cache_round_trips += 1
-        fetched = [h.wait() for h in handles]
-        return jax.tree.unflatten(treedef, fetched)
+        with self.tracer.span("serve", "cache_round_trip",
+                              engine=self._key_ns):
+            leaves, treedef = jax.tree.flatten(cache)
+            while len(self._kv_keys) < len(leaves):
+                self._kv_keys.append(f"{self._key_ns}/kv{len(self._kv_keys)}")
+            keys = self._kv_keys[:len(leaves)]
+            for k, leaf in zip(keys, leaves):
+                self.pool.put(k, leaf, HOST_TIER)
+            handles = [self.pool.prefetch(k) for k in keys]
+            self.stats.cache_round_trips += 1
+            fetched = [h.wait() for h in handles]
+            return jax.tree.unflatten(treedef, fetched)
 
     def _release_cache_keys(self) -> None:
         """Drop the standing cache entries (end of a generate call — the
@@ -144,6 +149,18 @@ class ServeEngine:
         tokens = batch["tokens"]
         b, s0 = tokens.shape
         assert s0 + max_new_tokens <= self.max_seq, "exceeds cache capacity"
+        with self.tracer.span("serve", "generate", engine=self._key_ns,
+                              batch=b, prompt_len=s0,
+                              max_new_tokens=max_new_tokens):
+            return self._generate(batch, max_new_tokens,
+                                  temperature=temperature, top_k=top_k,
+                                  seed=seed)
+
+    def _generate(self, batch: Dict[str, jax.Array], max_new_tokens: int, *,
+                  temperature: float, top_k: Optional[int],
+                  seed: int) -> jax.Array:
+        tokens = batch["tokens"]
+        b, s0 = tokens.shape
         cache = self.model.init_cache(b, self.max_seq, self.cache_dtype)
         logits, cache = self._prefill(self.params, batch, cache)
         self.stats.prefill_tokens += b * s0
