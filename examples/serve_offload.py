@@ -13,7 +13,10 @@ for fetching a fraction of the cache — the paper's NSA trade-off.
 ``--continuous`` instead demos the request-level continuous-batching
 scheduler (``repro.sched``): mixed-length Poisson arrivals served on a
 small slot pool with plan-driven KV prefetch and host-tier eviction of
-cold sequences' pages.
+cold sequences' pages. Adding ``--slo`` annotates the trace with mixed
+interactive/batch priority classes, overloads the arrival rate, and
+turns on SLO-aware scheduling (deadline-first admission, preemption,
+early shedding) — the demo ends with a per-class attainment summary.
 
 ``--trace-out PATH`` turns the session's telemetry on for either demo:
 the overlap summary (hidden vs exposed transfer time, straight from the
@@ -122,12 +125,13 @@ def main(trace_out=None):
     session.close()
 
 
-def main_continuous(trace_out=None):
+def main_continuous(trace_out=None, slo=False):
     """Continuous-batching scheduler demo: mixed traffic, pool-parked KV."""
     from repro.configs import REGISTRY
     from repro.models.model import build_model
     from repro.offload.kvcache import worst_case_page_bytes
     from repro.sched import poisson_trace
+    from repro.slo import SLOConfig, attainment_summary
 
     cfg = REGISTRY["phi3-mini-3.8b"].reduced()
     model = build_model(cfg)
@@ -140,11 +144,18 @@ def main_continuous(trace_out=None):
         prefill_budget=2,
         device_capacity=int(1.5 * row),
         host_capacity=2 * max_batch * row,
-        telemetry=_telemetry(trace_out)))
+        telemetry=_telemetry(trace_out),
+        slo=SLOConfig(enable=slo)))
     sched = session.scheduler(model, params)
-    trace = poisson_trace(10, rate=0.8, vocab_size=cfg.vocab_size,
+    # --slo: overload the arrival rate and mix interactive (TTFT-deadline)
+    # with batch (throughput-only) requests, so the deadline-first policy
+    # has something to prioritize
+    rate = 2.4 if slo else 0.8
+    trace = poisson_trace(10, rate=rate, vocab_size=cfg.vocab_size,
                           prompt_lens=(4, 16), new_tokens=(2, 12),
-                          prompt_quantum=4, seed=0)
+                          prompt_quantum=4,
+                          interactive_fraction=0.4 if slo else None,
+                          seed=0)
     t0 = time.time()
     out = sched.run(trace)
     dt = time.time() - t0
@@ -163,6 +174,17 @@ def main_continuous(trace_out=None):
           f"waits overlapped / {xfer['waits_blocked']} blocked")
     lat = sorted(s.t_done - s.request.arrival for s in sched.finished.values())
     print(f"latency (steps): p50 {lat[len(lat) // 2]:.1f}, max {lat[-1]:.1f}")
+    if slo:
+        att = attainment_summary(sched.finished.values())
+        print(f"slo: {att['met_tokens']}/{att['tokens']} tokens within "
+              f"deadline ({st.preemptions} preemptions, {st.resumes} "
+              f"resumes, {st.shed} shed)")
+        for cls, c in sorted(att["classes"].items()):
+            tta = c["ttft_attainment"]
+            print(f"  {cls}: {c['met_tokens']}/{c['tokens']} tokens met "
+                  f"({c['requests']} requests, {c['shed']} shed), "
+                  f"ttft attainment "
+                  f"{'n/a' if tta is None else format(tta, '.0%')}")
     _print_overlap(session, trace_out)
     session.close()   # closes the scheduler and the session-owned pool
 
@@ -171,10 +193,15 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--continuous", action="store_true",
                     help="run the continuous-batching scheduler demo")
+    ap.add_argument("--slo", action="store_true",
+                    help="with --continuous: overloaded mixed-class trace "
+                         "under SLO-aware scheduling + attainment summary")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="enable telemetry; write the Chrome trace here")
     args = ap.parse_args()
     if args.continuous:
-        main_continuous(args.trace_out)
+        main_continuous(args.trace_out, slo=args.slo)
+    elif args.slo:
+        ap.error("--slo requires --continuous")
     else:
         main(args.trace_out)

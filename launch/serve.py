@@ -12,6 +12,13 @@ https://ui.perfetto.dev. ``--stats-json`` writes the merged
 latency histograms and trace-ring state when tracing is on). With
 neither flag the launcher serves exactly as before — telemetry stays
 disabled and no tracer is ever constructed.
+
+SLO flags: ``--interactive-fraction F`` annotates the trace with mixed
+interactive/batch priority classes and TTFT deadlines; ``--slo`` turns
+on the SLO-aware scheduler (deadline-first admission, preemption, early
+shedding — ``OffloadConfig.slo``); ``--overload X`` multiplies the
+arrival rate by X to push the trace past capacity. With any of them the
+launcher prints a per-class SLO attainment summary after the run.
 """
 
 from __future__ import annotations
@@ -29,6 +36,7 @@ from repro.configs import REGISTRY
 from repro.models.model import build_model
 from repro.offload.kvcache import worst_case_page_bytes
 from repro.sched import poisson_trace
+from repro.slo import SLOConfig, attainment_summary
 
 
 def main() -> None:
@@ -46,7 +54,19 @@ def main() -> None:
                     help="enable telemetry and write the Chrome trace here")
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="write the merged session.stats() snapshot here")
+    ap.add_argument("--slo", action="store_true",
+                    help="SLO-aware scheduling: deadline-first admission, "
+                         "preemption, early shedding")
+    ap.add_argument("--overload", type=float, default=None, metavar="X",
+                    help="multiply --rate by X (drive the trace past "
+                         "capacity)")
+    ap.add_argument("--interactive-fraction", type=float, default=None,
+                    metavar="F",
+                    help="annotate the trace: F of requests interactive "
+                         "(TTFT deadline), rest batch")
     args = ap.parse_args()
+    if args.slo and args.interactive_fraction is None:
+        args.interactive_fraction = 0.35   # --slo alone still demos SLOs
 
     cfg = REGISTRY[args.arch].reduced()
     model = build_model(cfg)
@@ -64,12 +84,16 @@ def main() -> None:
     if args.trace_out is not None:
         kwargs["telemetry"] = TelemetryConfig(enable=True,
                                               trace_path=args.trace_out)
+    if args.slo:
+        kwargs["slo"] = SLOConfig(enable=True)
 
     session = HyperOffloadSession(OffloadConfig(**kwargs))
     sched = session.scheduler(model, params)
-    trace = poisson_trace(args.requests, rate=args.rate,
+    rate = args.rate * (args.overload or 1.0)
+    trace = poisson_trace(args.requests, rate=rate,
                           vocab_size=cfg.vocab_size, prompt_lens=(4, 16),
                           new_tokens=(2, 12), prompt_quantum=4,
+                          interactive_fraction=args.interactive_fraction,
                           seed=args.seed)
     t0 = time.time()
     out = sched.run(trace)
@@ -77,6 +101,21 @@ def main() -> None:
     tokens = sum(len(v) for v in out.values())
     print(f"serve,{args.mode},requests:{len(out)},tokens:{tokens},"
           f"steps:{sched.stats.steps},wall_s:{wall:.2f}")
+
+    if args.slo or args.interactive_fraction is not None:
+        att = attainment_summary(sched.finished.values())
+        st = sched.stats
+        print(f"serve,slo,goodput_tokens:{att['met_tokens']},"
+              f"goodput_tok/step:"
+              f"{att['met_tokens'] / max(sched.now, 1e-9):.2f},"
+              f"preemptions:{st.preemptions},resumes:{st.resumes},"
+              f"shed:{st.shed}")
+        for cls, c in sorted(att["classes"].items()):
+            tta = c["ttft_attainment"]
+            print(f"serve,slo_class,{cls},requests:{c['requests']},"
+                  f"met_tokens:{c['met_tokens']}/{c['tokens']},"
+                  f"shed:{c['shed']},ttft_attainment:"
+                  f"{'n/a' if tta is None else format(tta, '.2f')}")
 
     if args.trace_out is not None:
         ov = session.overlap()

@@ -38,6 +38,24 @@ assert ov["hidden_fraction"] is not None, \
 print(f"ci,overlap,hidden_fraction:{ov['hidden_fraction']:.2f}")
 EOF
 
+# SLO gate: at 3x overload the SLO-aware scheduler must beat FIFO on
+# goodput (deadline-met tokens per virtual step) AND on interactive TTFT
+# attainment — both on the deterministic virtual clock, so this is a
+# hard assert, not a flaky perf check
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import json
+o = json.load(open("BENCH_serving.json"))["overload"]["3x"]
+fifo, slo = o["fifo"], o["slo"]
+gf = fifo["goodput_tokens_per_step"]
+gs = slo["goodput_tokens_per_step"]
+assert gs > gf, f"SLO goodput {gs:.3f} <= FIFO {gf:.3f} at 3x overload"
+tf = fifo["attainment"]["classes"]["interactive"]["ttft_attainment"]
+ts = slo["attainment"]["classes"]["interactive"]["ttft_attainment"]
+assert ts > tf, f"SLO interactive TTFT attainment {ts:.2f} <= FIFO {tf:.2f}"
+print(f"ci,slo_overload_3x,goodput:{gf:.2f}->{gs:.2f},"
+      f"ttft_attainment:{tf:.2f}->{ts:.2f}")
+EOF
+
 # traced smoke serve: capture one Chrome trace through the launcher's
 # telemetry flags and validate it against the repro.obs schema checker
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

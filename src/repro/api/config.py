@@ -38,6 +38,7 @@ from repro.core.costmodel import ASCEND_LIKE, TPU_V5E, HardwareSpec
 from repro.core.insertion import PAGED_INSERTION, InsertionOptions
 from repro.core.schedule import ScheduleOptions
 from repro.pool.transfer import auto_depth
+from repro.slo.policy import SLOConfig
 
 MODES = ("resident", "kv_offload", "paged", "continuous")
 REMAT_MODES = ("none", "full", "offload")
@@ -146,6 +147,9 @@ class OffloadConfig:
     prefix_cache: PrefixCacheConfig = field(default_factory=PrefixCacheConfig)
     # unified telemetry (repro.obs): tracing + metrics, off by default
     telemetry: TelemetryConfig = field(default_factory=TelemetryConfig)
+    # SLO-aware scheduling (repro.slo): priority classes, deadline-driven
+    # preemption, goodput-maximizing admission; off by default (pure FIFO)
+    slo: SLOConfig = field(default_factory=SLOConfig)
 
     # -- planner knobs --------------------------------------------------
     insertion: Optional[InsertionOptions] = None   # None → mode default
@@ -195,6 +199,10 @@ class OffloadConfig:
                     "prefix_cache.enable requires a scheduler mode "
                     "('continuous' or 'kv_offload'), "
                     f"got mode={self.mode!r}")
+        if self.slo.enable and self.mode not in ("continuous", "kv_offload"):
+            raise ValueError(
+                "slo.enable requires a scheduler mode ('continuous' or "
+                f"'kv_offload'), got mode={self.mode!r}")
 
     # ------------------------------------------------------------------
     @property
@@ -261,6 +269,8 @@ class OffloadConfig:
         if isinstance(kwargs.get("telemetry"), dict):
             kwargs["telemetry"] = _options_from(TelemetryConfig,
                                                 kwargs["telemetry"])
+        if isinstance(kwargs.get("slo"), dict):
+            kwargs["slo"] = _options_from(SLOConfig, kwargs["slo"])
         return cls(**kwargs)
 
     def replace(self, **changes) -> "OffloadConfig":

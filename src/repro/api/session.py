@@ -152,15 +152,25 @@ class HyperOffloadSession:
                  "retires": 0, "prefill_tokens": 0, "prefill_chunks": 0,
                  "decoded_tokens": 0, "pages_parked": 0, "cold_spills": 0,
                  "prefix_hits": 0, "prefix_hit_tokens": 0,
+                 "preemptions": 0, "resumes": 0, "shed": 0,
                  "admission_blocked": 0}
         prefetch = {"steps": 0, "fetches_issued": 0, "layers_planned": 0}
+        slo: Optional[Dict[str, int]] = None
         leads: List[tuple] = []
         for s in self._schedulers:
             for k in ("steps", "joins", "retires", "prefill_tokens",
                       "prefill_chunks", "decoded_tokens", "pages_parked",
-                      "cold_spills", "prefix_hits", "prefix_hit_tokens"):
+                      "cold_spills", "prefix_hits", "prefix_hit_tokens",
+                      "preemptions", "resumes", "shed"):
                 sched[k] += getattr(s.stats, k)
             sched["admission_blocked"] += s.admission.blocked
+            snap = s.slo_snapshot()
+            if snap is not None:
+                if slo is None:
+                    slo = dict(snap)
+                else:
+                    for k, v in snap.items():
+                        slo[k] = slo.get(k, 0) + v
             pf = s.prefetch_stats()
             if pf is not None:
                 for k in ("steps", "fetches_issued", "layers_planned"):
@@ -169,6 +179,8 @@ class HyperOffloadSession:
         if leads:
             prefetch["mean_plan_lead"] = _weighted_plan_lead(leads)
         sched["prefetch"] = prefetch
+        if slo is not None:
+            sched["slo"] = slo
         return sched
 
     def _collect_paged(self) -> Dict[str, Any]:
@@ -226,7 +238,8 @@ class HyperOffloadSession:
                 prefill_budget=c.prefill_budget, chunk_size=c.chunk_size,
                 prefill_tokens=c.prefill_tokens, kv_offload=c.offload_kv,
                 cache_dtype=c.dtype, hw=c.hardware,
-                insert_opts=c.insertion_options(), refine=c.refine)
+                insert_opts=c.insertion_options(), refine=c.refine,
+                slo=c.slo if c.slo.enable else None)
             base.update(overrides)
             if (base["kv_offload"] and c.insertion is None
                     and "insert_opts" not in overrides):

@@ -184,6 +184,16 @@ class MemoryPoolManager:
         with self._lock:
             self.entries[key].pinned = pinned
 
+    def set_priority(self, key: str, priority: float) -> None:
+        """Re-rank an entry for eviction without touching its data — the
+        scheduler demotes a preempted request's parked pages this way so
+        device-tier pressure spills them ahead of live sequences' pages
+        (no-op for keys not in the pool)."""
+        with self._lock:
+            entry = self.entries.get(key)
+            if entry is not None:
+                entry.priority = priority
+
     # -- admission control (capacity reservation) ----------------------
     def reserve(self, key: str, nbytes: int,
                 tiers: Optional[Sequence[str]] = None,

@@ -15,14 +15,14 @@
 from repro.sched.prefetch import InFlightFetches, PlanPrefetcher, PrefetchStats
 from repro.sched.queue import AdmissionController, ArrivalQueue, poisson_trace
 from repro.sched.requests import (
-    DECODE, DONE, PREFILL, QUEUED, Request, RequestState,
+    DECODE, DONE, PREEMPTED, PREFILL, QUEUED, SHED, Request, RequestState,
 )
 from repro.sched.scheduler import (
     ContinuousScheduler, SchedStats, SchedulerConfig,
 )
 
 __all__ = [
-    "QUEUED", "PREFILL", "DECODE", "DONE",
+    "QUEUED", "PREFILL", "DECODE", "DONE", "PREEMPTED", "SHED",
     "Request", "RequestState",
     "ArrivalQueue", "AdmissionController", "poisson_trace",
     "PlanPrefetcher", "PrefetchStats", "InFlightFetches",

@@ -19,6 +19,7 @@ import numpy as np
 from repro.pool import DEVICE_TIER, HOST_TIER
 from repro.pool.manager import MemoryPoolManager
 from repro.sched.requests import Request, RequestState
+from repro.slo.policy import SLOSpec
 
 ADMISSION_TIERS = (DEVICE_TIER, HOST_TIER)
 
@@ -59,8 +60,27 @@ class ArrivalQueue:
             return self._q[0]
         return None
 
+    def ready(self, now: float) -> Tuple[RequestState, ...]:
+        """Every request whose arrival time has passed, in arrival order —
+        the SLO-aware scheduler re-ranks these by priority/deadline
+        instead of taking the FIFO head."""
+        i = bisect.bisect_right(self._q, now,
+                                key=lambda s: s.request.arrival)
+        return tuple(self._q[:i])
+
     def pop(self) -> RequestState:
         return self._q.pop(0)
+
+    def remove(self, state: RequestState) -> None:
+        """Remove a specific queued state (SLO admission takes the best
+        candidate, not necessarily the head; shedding drops mid-queue).
+        Matched by identity — dataclass equality would compare token
+        arrays elementwise."""
+        for i, s in enumerate(self._q):
+            if s is state:
+                del self._q[i]
+                return
+        raise ValueError(f"req {state.req_id} not queued")
 
     def next_arrival(self) -> Optional[float]:
         return self._q[0].request.arrival if self._q else None
@@ -105,6 +125,12 @@ class AdmissionController:
         return nbytes <= cap
 
 
+#: default specs for poisson_trace's mixed interactive/batch mode: tight
+#: first-token deadline on the interactive class, pure-throughput batch
+DEFAULT_INTERACTIVE_SLO = SLOSpec("interactive", ttft_deadline=8.0)
+DEFAULT_BATCH_SLO = SLOSpec("batch")
+
+
 def poisson_trace(n_requests: int, *, rate: float, vocab_size: int,
                   prompt_lens: Sequence[int] = (4, 24),
                   new_tokens: Sequence[int] = (2, 16),
@@ -113,6 +139,9 @@ def poisson_trace(n_requests: int, *, rate: float, vocab_size: int,
                   long_fraction: float = 0.0,
                   n_prefix_families: Optional[int] = None,
                   prefix_len: int = 0,
+                  interactive_fraction: Optional[float] = None,
+                  interactive_slo: Optional[SLOSpec] = None,
+                  batch_slo: Optional[SLOSpec] = None,
                   seed: int = 0) -> List[Request]:
     """Deterministic mixed-length Poisson arrival trace (benchmarks/tests):
     exponential inter-arrival gaps at ``rate`` requests per unit of
@@ -144,7 +173,25 @@ def poisson_trace(n_requests: int, *, rate: float, vocab_size: int,
     usual ``prompt_lens``-sampled length (total prompt = ``prefix_len`` +
     suffix — callers size ``max_seq`` accordingly). The family is drawn
     uniformly per request. When ``n_prefix_families`` is None the RNG call
-    sequence is unchanged — seeded traces stay byte-identical."""
+    sequence is unchanged — seeded traces stay byte-identical.
+
+    ``interactive_fraction`` switches on **mixed interactive/batch
+    traffic** (the SLO-scheduling benchmark's shape): each request is
+    annotated ``interactive_slo`` with that probability, else
+    ``batch_slo`` (defaults: an ``interactive``-class spec with a tight
+    TTFT deadline vs a deadline-free ``batch``-class spec). Class draws
+    come from a *dedicated* RNG stream derived from ``seed``, so
+    annotating a trace never perturbs its traffic: the arrivals, lengths
+    and tokens of a seeded trace are byte-identical with the feature on,
+    off, or before it existed — an SLO run and a FIFO baseline can share
+    literally the same traffic."""
+    if interactive_fraction is not None:
+        if not 0.0 <= interactive_fraction <= 1.0:
+            raise ValueError("interactive_fraction must be in [0, 1]")
+        if interactive_slo is None:
+            interactive_slo = DEFAULT_INTERACTIVE_SLO
+        if batch_slo is None:
+            batch_slo = DEFAULT_BATCH_SLO
     if n_prefix_families is not None:
         if n_prefix_families < 1:
             raise ValueError("n_prefix_families must be >= 1")
@@ -159,6 +206,10 @@ def poisson_trace(n_requests: int, *, rate: float, vocab_size: int,
                 f"range {tuple(rng_range)}: no on-grid length can be "
                 "emitted without violating a bound")
     rng = np.random.default_rng(seed)
+    # separate stream for class annotation so it consumes none of the
+    # traffic stream's draws (see docstring)
+    cls_rng = (np.random.default_rng([seed, 0x510])
+               if interactive_fraction is not None else None)
     prefixes = None
     if n_prefix_families is not None:
         prefixes = [rng.integers(0, vocab_size, size=prefix_len,
@@ -179,5 +230,11 @@ def poisson_trace(n_requests: int, *, rate: float, vocab_size: int,
         if prefixes is not None:
             fam = int(rng.integers(0, n_prefix_families))
             toks = np.concatenate([prefixes[fam], toks])
-        out.append(Request(tokens=toks, max_new_tokens=m, arrival=t, seed=i))
+        slo = None
+        if cls_rng is not None:
+            slo = (interactive_slo
+                   if cls_rng.random() < interactive_fraction
+                   else batch_slo)
+        out.append(Request(tokens=toks, max_new_tokens=m, arrival=t,
+                           seed=i, slo=slo))
     return out

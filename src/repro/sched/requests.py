@@ -1,8 +1,10 @@
 """Request lifecycle for the continuous-batching scheduler.
 
-A ``Request`` is what a client submits: prompt tokens, a decode budget, and
-sampling parameters. ``RequestState`` is the scheduler's view of it moving
-through QUEUED → PREFILL → DECODE → DONE:
+A ``Request`` is what a client submits: prompt tokens, a decode budget,
+sampling parameters, and (optionally) an ``SLOSpec`` — priority class and
+TTFT/TPOT deadlines the SLO-aware scheduler acts on. ``RequestState`` is
+the scheduler's view of it moving through QUEUED → PREFILL → DECODE →
+DONE:
 
 - QUEUED   — waiting in the arrival queue (not yet admitted: no slot, no
              capacity reservation);
@@ -15,6 +17,20 @@ through QUEUED → PREFILL → DECODE → DONE:
 - DECODE   — joined the running batch; one token per scheduler step;
 - DONE     — produced ``max_new_tokens``; slot freed, reservation released,
              pages dropped.
+
+Two SLO-mode-only states branch off that spine:
+
+- PREEMPTED — was PREFILL or DECODE; its slot was handed to a deadline-
+              pressed higher-priority arrival. The KV rows live on
+              ``chunk_cache`` (resident) or stay parked in the pool
+              (kv_offload); the capacity reservation is *kept* (the pages
+              really occupy pool space), so restoring never re-admits.
+              Resumes to its prior state when a slot frees — token stream
+              byte-identical to an unpreempted run;
+- SHED      — dropped from the queue before admission because its TTFT
+              deadline was already unmeetable (goodput: no prefill spent
+              on certainly-missed work). Terminal, like DONE, but with no
+              output.
 
 Each admitted request owns a ``KVPageTable`` (offload.kvcache): its slice
 of the stacked decode cache, page-granular, living in the memory pool when
@@ -36,11 +52,14 @@ import jax
 import numpy as np
 
 from repro.offload.kvcache import KVPageTable
+from repro.slo.policy import SLOSpec
 
 QUEUED = "QUEUED"
 PREFILL = "PREFILL"
 DECODE = "DECODE"
 DONE = "DONE"
+PREEMPTED = "PREEMPTED"
+SHED = "SHED"
 
 _REQUEST_IDS = itertools.count()
 
@@ -55,6 +74,7 @@ class Request:
     temperature: float = 0.0
     top_k: Optional[int] = None
     seed: int = 0
+    slo: Optional[SLOSpec] = None      # None → standard class, no deadlines
     req_id: int = dataclasses.field(default_factory=lambda: next(_REQUEST_IDS))
 
     def __post_init__(self) -> None:
@@ -90,6 +110,7 @@ class RequestState:
     pages: Optional[KVPageTable] = None
     prefix_hit: Optional[Any] = None   # PrefixHit while admitted (refs held)
     reserve_key: str = ""              # pool reservation handle
+    preemptions: int = 0               # times parked mid-flight (SLO mode)
     last_step: int = -1                # last scheduler step that decoded us
     joined_step: int = -1
     t_joined: Optional[float] = None   # admission time (queue-wait metric)

@@ -67,9 +67,19 @@ from repro.pool.manager import PoolEntry
 from repro.prefix import PrefixCacheManager
 from repro.sched.prefetch import InFlightFetches, PlanPrefetcher
 from repro.sched.queue import AdmissionController, ArrivalQueue
-from repro.sched.requests import DECODE, DONE, PREFILL, Request, RequestState
+from repro.sched.requests import (
+    DECODE, DONE, PREEMPTED, PREFILL, SHED, Request, RequestState,
+)
 from repro.serving.engine import jit_decode, jit_prefill, jit_prefill_chunk
 from repro.serving.sampling import sample_token
+from repro.slo.admission import GoodputController
+from repro.slo.policy import SLOConfig, candidate_key
+from repro.slo.preempt import PreemptionEngine
+
+#: pool priority of a preempted request's parked pages: below every live
+#: sequence's pages (priority >= 1, their remaining work) but above the
+#: prefix cache's 0.0 — device pressure spills preempted rows first.
+_PREEMPTED_PAGE_PRIO = 0.25
 
 _SCHED_IDS = itertools.count()
 
@@ -95,6 +105,12 @@ class SchedulerConfig:
     # OffloadConfig instead of the old call-site hard-coding.
     insert_opts: Optional[InsertionOptions] = None
     refine: bool = True
+    # SLO-aware scheduling (repro.slo): None (or enable=False) keeps pure
+    # FIFO + capacity admission; enabled, ready requests are admitted
+    # best-first (priority class, then earliest TTFT deadline), certainly-
+    # infeasible requests are shed, and deadline-pressed arrivals may
+    # preempt (park) a running lower-priority sequence.
+    slo: Optional[SLOConfig] = None
 
 
 @dataclasses.dataclass
@@ -109,6 +125,9 @@ class SchedStats:
     cold_spills: int = 0          # our pages spilled down-tier by the manager
     prefix_hits: int = 0          # admissions that matched the prefix cache
     prefix_hit_tokens: int = 0    # prompt tokens served from cached prefixes
+    preemptions: int = 0          # running sequences parked for a deadline
+    resumes: int = 0              # preempted sequences restored to a slot
+    shed: int = 0                 # requests dropped as deadline-infeasible
 
 
 class ContinuousScheduler:
@@ -194,6 +213,17 @@ class ContinuousScheduler:
         self.admission = AdmissionController(self.pool)
         self._row_bytes = worst_case_page_bytes(
             model.cache_specs(1, cfg.max_seq, cfg.cache_dtype))
+        # SLO-aware scheduling (repro.slo): policy objects + the parked
+        # (preempted) states, which are in neither the queue nor a slot
+        # but still hold their capacity reservation
+        self.slo: Optional[SLOConfig] = \
+            cfg.slo if (cfg.slo is not None and cfg.slo.enable) else None
+        self.preempted: List[RequestState] = []
+        self.goodput: Optional[GoodputController] = None
+        self.preemptor: Optional[PreemptionEngine] = None
+        if self.slo is not None:
+            self.goodput = GoodputController(self.slo, metrics=metrics)
+            self.preemptor = PreemptionEngine(self.slo)
         self.prefetcher: Optional[PlanPrefetcher] = None
         self._inflight: Optional[InFlightFetches] = None
         self._fetch_map: Dict[str, Tuple[int, int, int, int, int]] = {}
@@ -249,7 +279,8 @@ class ContinuousScheduler:
         self._closed = True
         if self.cfg.kv_offload:
             self.pool.remove_evict_listener(self._on_evict)
-        for st in list(self.slots) + list(self.finished.values()):
+        for st in (list(self.slots) + list(self.preempted)
+                   + list(self.finished.values())):
             if st is not None and st.pages is not None:
                 st.pages.drop()
             if st is not None:
@@ -286,7 +317,14 @@ class ContinuousScheduler:
         self._inflight = None
         updates: Dict[Tuple[int, int], List[Tuple[int, int, int, jax.Array]]] = {}
         for key, arr in fetched.items():
-            si, pi, j, ri, slot = self._fetch_map[key]
+            dest = self._fetch_map.get(key)
+            if dest is None:
+                # the owner was preempted after these fetches were issued:
+                # its slot may already hold another request, so the value
+                # is dropped (the page itself stays pool-resident from the
+                # last park — restore re-fetches it)
+                continue
+            si, pi, j, ri, slot = dest
             updates.setdefault((si, pi), []).append((j, ri, slot, arr))
         self._fetch_map = {}
         for (si, pi), ups in updates.items():
@@ -296,39 +334,225 @@ class ContinuousScheduler:
             self.cache["segments"][si][f"p{pi}"] = jax.tree.unflatten(
                 treedef, leaves)
 
+    def _reserve_capacity(self, state: RequestState) -> bool:
+        """Worst-case capacity reservation shared by every admission path
+        (the request's page-key prefix ``covers`` its future parked pages
+        — "-" guards req3 vs req30). False = capacity pressure."""
+        covers = f"{self._ns}/req{state.req_id}-"
+        if self.admission.try_admit(state, self._row_bytes, covers):
+            return True
+        if (not self.active and not self.preempted
+                and not self.admission.can_ever_admit(self._row_bytes)):
+            raise RuntimeError(
+                f"request {state.req_id} can never be admitted: "
+                f"worst-case pages ({self._row_bytes} B) exceed the "
+                "pool's device+host capacity")
+        return False   # retirements will free it
+
     def _try_admit_head(self) -> Optional[Tuple[RequestState, int]]:
         """Admission guard shared by both prefill paths: pop the arrival
-        queue's head into a free slot if the pool can hold its worst-case
-        pages. Returns (state, slot) or None (no slot / not arrived /
-        capacity pressure)."""
+        queue's best candidate into a free slot (SLO mode: possibly freed
+        by preemption) if the pool can hold its worst-case pages. Returns
+        (state, slot) or None (no slot / not arrived / capacity
+        pressure)."""
+        if self.slo is not None:
+            return self._try_admit_slo()
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free:
             return None
         state = self.queue.head_ready(self.now)
         if state is None:
             return None
-        # the request's page-key prefix ("-" guards req3 vs req30)
-        covers = f"{self._ns}/req{state.req_id}-"
-        if not self.admission.try_admit(state, self._row_bytes, covers):
-            if not self.active and not self.admission.can_ever_admit(
-                    self._row_bytes):
-                raise RuntimeError(
-                    f"request {state.req_id} can never be admitted: "
-                    f"worst-case pages ({self._row_bytes} B) exceed the "
-                    "pool's device+host capacity")
-            return None   # capacity pressure — retirements will free it
+        if not self._reserve_capacity(state):
+            return None
         self.queue.pop()
         return state, free[0]
 
+    def _try_admit_slo(self) -> Optional[Tuple[RequestState, int]]:
+        """SLO admission: the best ready candidate (priority class, then
+        earliest TTFT deadline — ``slo.candidate_key``) takes a free slot,
+        or — when none is free and its deadline can't survive waiting for
+        a natural retirement — a slot freed by preempting a running
+        lower-priority sequence. Capacity is reserved *before* the
+        preemption is performed, so a reservation failure never parks a
+        victim for nothing."""
+        ready = self.queue.ready(self.now)
+        if not ready:
+            return None
+        state = min(ready, key=candidate_key)
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if free:
+            if not self._reserve_capacity(state):
+                return None
+            self.queue.remove(state)
+            return state, free[0]
+        running = self.active
+        if self.cfg.kv_offload:
+            # a sequence that reached DECODE *this step* (prefill just
+            # finished) has its freshest row only in the stacked cache —
+            # its pool pages aren't parked until this step's epilogue —
+            # so it is not preemptible yet
+            running = [s for s in running
+                       if not (s.status == DECODE
+                               and s.last_step == self.stats.steps)]
+        victim = self.preemptor.pick_victim(
+            state, running, self.now,
+            est_prefill_steps=self._est_prefill_steps(state),
+            remaining_steps=self._remaining_steps)
+        if victim is None:
+            return None
+        if not self._reserve_capacity(state):
+            return None
+        slot = victim.slot
+        self._preempt(victim)
+        self.queue.remove(state)
+        return state, slot
+
+    # -- SLO mechanics -------------------------------------------------
+    def _est_prefill_steps(self, state: RequestState) -> float:
+        """Optimistic steps from admission to first token for a queued
+        candidate: its remaining prompt plus the prompt backlog already
+        mid-prefill, at the measured per-step prefill rate. Whole-prompt
+        mode prefills in the admission step itself."""
+        if self.cfg.chunk_size is None:
+            return 1.0
+        base = self.cfg.prefill_tokens or self.cfg.chunk_size
+        rate = self.goodput.rate(base)
+        backlog = sum(max(s.request.prompt_len - s.prefill_pos, 0)
+                      for s in self.slots
+                      if s is not None and s.status == PREFILL)
+        remaining = max(state.request.prompt_len - state.prefill_pos, 0)
+        return max(1.0, np.ceil((backlog + remaining) / rate))
+
+    def _remaining_steps(self, s: RequestState) -> int:
+        """Steps until a running state retires and frees its slot (decode
+        budget plus, mid-prefill, its outstanding chunks)."""
+        n = s.request.max_new_tokens - len(s.out)
+        if s.status == PREFILL and self.cfg.chunk_size is not None:
+            base = self.cfg.prefill_tokens or self.cfg.chunk_size
+            rem = max(s.request.prompt_len - s.prefill_pos, 0)
+            n += -(-rem // base)
+        return n
+
+    def _slo_shed_sweep(self) -> None:
+        """Drop every ready request whose TTFT deadline is certainly
+        unmeetable — *before* admission, so no prefill is spent on
+        admitted-then-missed work."""
+        for state in self.queue.ready(self.now):
+            if self.goodput.infeasible(
+                    state, self.now, self._est_prefill_steps(state)):
+                self._shed(state)
+
+    def _shed(self, state: RequestState) -> None:
+        """Terminal drop from the queue: never admitted, so there is no
+        slot, reservation, or page to release."""
+        self.queue.remove(state)
+        state.status = SHED
+        state.t_done = self.now
+        self.finished[state.req_id] = state
+        self.stats.shed += 1
+        self.goodput.note_retired(state)
+        if self._tracer.enabled:
+            self._tracer.instant("request", "SHED",
+                                 {"req": state.req_id,
+                                  "arrival": state.request.arrival})
+
+    def _preempt(self, victim: RequestState) -> None:
+        """Park a running sequence and free its slot. A DECODE victim's
+        rows are either already pool-resident from the last ``_park_and_
+        issue`` (kv_offload — just demote their priority and orphan any
+        in-flight fetches targeting the reassigned slot) or sliced out of
+        the stacked cache onto ``chunk_cache`` (resident). A mid-PREFILL
+        victim's partial row is already on ``chunk_cache``/in the pool
+        (``_park_chunk_row`` ran when the chunk budget moved on). The
+        capacity reservation is kept — the pages still occupy pool space,
+        so admission stays exactly as conservative as before."""
+        slot = victim.slot
+        if victim.status == DECODE and not self.cfg.kv_offload:
+            victim.chunk_cache = jax.tree.map(
+                lambda big: big[:, slot:slot + 1], self.cache)
+        if self.cfg.kv_offload and victim.pages is not None:
+            for key in victim.pages.keys.values():
+                self._fetch_map.pop(key, None)
+                self.pool.set_priority(key, _PREEMPTED_PAGE_PRIO)
+        victim.status = PREEMPTED
+        victim.preemptions += 1
+        victim.slot = None
+        self.slots[slot] = None
+        self.preempted.append(victim)
+        self.stats.preemptions += 1
+        if self._tracer.enabled:
+            self._tracer.instant("request", "PREEMPTED",
+                                 {"req": victim.req_id, "slot": slot})
+
+    def _resume_preempted(self, *, final: bool) -> None:
+        """Restore preempted sequences into free slots, best first. In the
+        pre-pass (``final=False``) a preempted sequence only takes a slot
+        if it outranks every ready queued candidate — otherwise admission
+        gets first claim on the slot this step; the post-pass
+        (``final=True``) hands any slots admission left free back to
+        preempted work (its capacity is already reserved)."""
+        while self.preempted:
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            if not free:
+                return
+            best = min(self.preempted, key=candidate_key)
+            if not final:
+                ready = self.queue.ready(self.now)
+                if ready and min(candidate_key(s) for s in ready) \
+                        < candidate_key(best):
+                    return
+            # by identity: dataclass equality would compare token arrays
+            self.preempted = [s for s in self.preempted if s is not best]
+            self._resume(best, free[0])
+
+    def _resume(self, state: RequestState, slot: int) -> None:
+        """Inverse of ``_preempt``: a DECODE sequence's row rides the same
+        restore path parked mid-prefill chunks use (chunk_cache or plan-
+        driven pool fetches) and is scattered back into the slot; a mid-
+        PREFILL sequence just re-enters the chunked loop, which restores
+        its row on its next advance."""
+        was_decode = state.t_first_token is not None
+        self.slots[slot] = state
+        state.slot = slot
+        state.status = DECODE if was_decode else PREFILL
+        self.stats.resumes += 1
+        if was_decode:
+            row = self._restore_chunk_row(state)
+            self.cache = jax.tree.map(
+                lambda big, r: big.at[:, slot].set(r[:, 0]),
+                self.cache, row)
+        if self._tracer.enabled:
+            self._tracer.instant("request", "RESUMED",
+                                 {"req": state.req_id, "slot": slot})
+
+    def slo_snapshot(self) -> Optional[Dict[str, int]]:
+        return None if self.goodput is None else self.goodput.snapshot()
+
     def _admit_and_prefill(self) -> List[Tuple[int, int]]:
+        if self.slo is not None:
+            # SLO pre-pass: reset the preemption quota, shed certainly-
+            # infeasible arrivals before any admission work, and restore
+            # preempted sequences that outrank everything still queued
+            pt0 = self.stats.prefill_tokens
+            self.preemptor.begin_step()
+            self._slo_shed_sweep()
+            self._resume_preempted(final=False)
         if self.cfg.chunk_size is not None:
-            return self._admit_and_prefill_chunked()
-        emitted: List[Tuple[int, int]] = []
-        for _ in range(self.cfg.prefill_budget):
-            admitted = self._try_admit_head()
-            if admitted is None:
-                break
-            emitted.append(self._join(*admitted))
+            emitted = self._admit_and_prefill_chunked()
+        else:
+            emitted = []
+            for _ in range(self.cfg.prefill_budget):
+                admitted = self._try_admit_head()
+                if admitted is None:
+                    break
+                emitted.append(self._join(*admitted))
+        if self.slo is not None:
+            # slots admission left free (no ready candidates / capacity)
+            # go back to preempted sequences, and the step's landed
+            # prefill tokens feed the measured-rate estimate
+            self._resume_preempted(final=True)
+            self.goodput.note_step(self.stats.prefill_tokens - pt0)
         return emitted
 
     def _admit_and_prefill_chunked(self) -> List[Tuple[int, int]]:
@@ -342,13 +566,23 @@ class ContinuousScheduler:
         so the loop can't stall."""
         emitted: List[Tuple[int, int]] = []
         budget = self.cfg.prefill_tokens or self.cfg.chunk_size
-        spent = 0
         mid = [s for s in self.slots
                if s is not None and s.status == PREFILL]
+        if self.goodput is not None:
+            # deadline pressure on mid-prefill requests may raise the
+            # step's token budget (capped at max_prefill_boost)
+            budget = self.goodput.boost_budget(budget, mid, self.now)
+        spent = 0
         for s in sorted(mid, key=lambda s: (s.joined_step, s.req_id)):
             out, spent = self._advance_chunks(s, spent, budget)
             emitted += out
-        while spent < budget:
+        # SLO mode: mid-prefill work exhausting the budget must not hide
+        # the admission (and preemption) check from a deadline-pressed
+        # arrival — it still gets one seat attempt; its own chunks then
+        # start next step
+        tries = 0
+        while spent < budget or (self.slo is not None and tries == 0):
+            tries += 1
             admitted = self._try_admit_head()
             if admitted is None:
                 break
@@ -643,6 +877,8 @@ class ContinuousScheduler:
         state.slot = None
         self.finished[state.req_id] = state
         self.stats.retires += 1
+        if self.goodput is not None:
+            self.goodput.note_retired(state)
 
     def _donate_prefix(self, state: RequestState) -> None:
         """Retirement-side donation: the retired prompt's full prefix pages
@@ -737,7 +973,8 @@ class ContinuousScheduler:
                 n += -(-rem // self.cfg.chunk_size)   # ceil
             return n
         return 16 + 2 * sum(
-            _steps_for(s) for s in list(self.queue.pending()) + self.active)
+            _steps_for(s) for s in (list(self.queue.pending()) + self.active
+                                    + list(self.preempted)))
 
     def run(self, requests: Sequence[Request] = (), *,
             max_steps: Optional[int] = None) -> Dict[int, np.ndarray]:
@@ -748,8 +985,9 @@ class ContinuousScheduler:
         if max_steps is None:
             max_steps = self.default_max_steps()
         steps = 0
-        while len(self.queue) or self.active:
-            if not self.active and self.queue.head_ready(self.now) is None:
+        while len(self.queue) or self.active or self.preempted:
+            if (not self.active and not self.preempted
+                    and self.queue.head_ready(self.now) is None):
                 self.now = max(self.now, self.queue.next_arrival())  # idle skip
             self.step()
             steps += 1

@@ -353,6 +353,46 @@ def test_session_disabled_shape_and_tokens(model_and_params):
     assert outs[False] == outs[True]
 
 
+def test_session_slo_counters_in_stats_and_prometheus(model_and_params):
+    """SLO counters flow end to end: scheduler → session collector →
+    ``stats()['sched']`` → the Prometheus text dump, all agreeing — and
+    the preempt/resume lifecycle lands in the trace ring as instants."""
+    from repro.slo import SLOConfig, SLOSpec
+
+    model, params = model_and_params
+    vocab = REGISTRY["phi3-mini-3.8b"].reduced().vocab_size
+    rng = np.random.default_rng(9)
+    reqs = [
+        Request(tokens=rng.integers(0, vocab, 5, dtype=np.int32),
+                max_new_tokens=10, arrival=0.0, seed=0,
+                slo=SLOSpec("batch")),
+        Request(tokens=rng.integers(0, vocab, 4, dtype=np.int32),
+                max_new_tokens=3, arrival=3.0, seed=1,
+                slo=SLOSpec("interactive", ttft_deadline=2.0)),
+    ]
+    cfg = OffloadConfig(mode="continuous", max_batch=1, max_seq=32,
+                        slo=SLOConfig(enable=True),
+                        telemetry=TelemetryConfig(enable=True))
+    with HyperOffloadSession(cfg) as s:
+        sched = s.scheduler(model, params)
+        sched.run(reqs)
+        st = s.stats()["sched"]
+        assert st["preemptions"] == 1 and st["resumes"] == 1
+        assert st["shed"] == 0
+        assert st["slo"]["goodput_tokens"] == 13
+        text = s.stats_text()
+        # the flattened collector samples mirror the snapshot numerically
+        for line in ("sched_preemptions 1", "sched_resumes 1",
+                     "sched_shed 0", "sched_slo_goodput_tokens 13",
+                     "sched_slo_met_requests 2"):
+            assert line in text, f"{line!r} missing from Prometheus dump"
+        # the deadline-relative slack histogram saw the interactive request
+        assert "req_ttft_slack_steps_bucket" in text
+        # preempt/restore are first-class trace events
+        names = [e.name for e in s.tracer.events() if e.cat == "request"]
+        assert names.count("PREEMPTED") == 1 and names.count("RESUMED") == 1
+
+
 def test_telemetry_config_round_trip():
     cfg = OffloadConfig(telemetry=TelemetryConfig(
         enable=True, ring_capacity=128, trace_path="/tmp/t.json"))

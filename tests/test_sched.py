@@ -362,6 +362,47 @@ def test_poisson_trace_rejects_oversized_quantum():
                       prompt_quantum=8, seed=0)
 
 
+def test_poisson_trace_interactive_annotations():
+    """Mixed interactive/batch mode: every request carries a spec, the
+    interactive share is ~the asked fraction, and custom specs pass
+    through untouched."""
+    from repro.slo import SLOSpec
+    tr = poisson_trace(64, rate=1.0, vocab_size=128,
+                       interactive_fraction=0.35, seed=0)
+    classes = [r.slo.priority_class for r in tr]
+    assert set(classes) == {"interactive", "batch"}
+    assert 0.15 < classes.count("interactive") / len(tr) < 0.55
+    for r in tr:
+        if r.slo.priority_class == "interactive":
+            assert r.slo.ttft_deadline == 8.0       # default tight TTFT
+        else:
+            assert r.slo.ttft_deadline is None      # batch: throughput only
+    custom = poisson_trace(
+        16, rate=1.0, vocab_size=128, interactive_fraction=0.5,
+        interactive_slo=SLOSpec("interactive", ttft_deadline=3.0),
+        batch_slo=SLOSpec("standard", tpot_deadline=2.0), seed=0)
+    for r in custom:
+        assert r.slo.ttft_deadline == 3.0 \
+            or r.slo.tpot_deadline == 2.0
+    with pytest.raises(ValueError, match="interactive_fraction"):
+        poisson_trace(4, rate=1.0, vocab_size=128,
+                      interactive_fraction=1.5, seed=0)
+
+
+def test_poisson_trace_annotations_off_is_byte_identical():
+    """With interactive_fraction=None the RNG call sequence is unchanged:
+    tokens/lengths/arrivals match an annotated trace of the same seed
+    draw for draw (the class draw comes after all existing draws)."""
+    a = poisson_trace(8, rate=1.0, vocab_size=128, seed=3)
+    b = poisson_trace(8, rate=1.0, vocab_size=128, seed=3,
+                      interactive_fraction=0.9)
+    assert all(r.slo is None for r in a)
+    for x, y in zip(a, b):
+        assert x.arrival == y.arrival
+        assert x.max_new_tokens == y.max_new_tokens
+        np.testing.assert_array_equal(x.tokens, y.tokens)
+
+
 def test_poisson_trace_long_tail():
     long = poisson_trace(64, rate=1.0, vocab_size=128, prompt_lens=(4, 8),
                          long_prompt_lens=(40, 48), long_fraction=0.5,
