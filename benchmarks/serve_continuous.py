@@ -52,6 +52,7 @@ from repro.configs import REGISTRY
 from repro.models.model import build_model
 from repro.obs import OverlapAnalyzer
 from repro.offload.kvcache import worst_case_page_bytes
+from repro.pool import TierSpec, TierTopology
 from repro.sched import Request, poisson_trace
 from repro.serving.engine import jit_prefill_chunk
 from repro.slo import SLOConfig, SLOSpec, attainment_summary
@@ -315,6 +316,82 @@ def run_prefix_cache_comparison(model, params, *, requests: int, rate: float,
 
 
 # ---------------------------------------------------------------------------
+# closed-loop calibration: static vs measured planning on a modeled tier
+# ---------------------------------------------------------------------------
+
+
+def run_calibration_comparison(model, params, *, requests: int, rate: float,
+                               vocab_size: int, max_batch: int, max_seq: int,
+                               seed: int) -> Dict[str, object]:
+    """The same kv_offload trace twice over a latency-dominated modeled
+    tier: once planned from the static `HardwareSpec`, once after
+    ``session.recalibrate()`` folded the first arm's measured per-pair
+    transfer telemetry back into planning.
+
+    The topology squeezes the device tier so cold parked pages spill into
+    a ``modeled`` tier whose reads cost milliseconds of enforced latency.
+    The static arm runs with the engine's default 2 transfer workers —
+    per-stream latency serializes a step's fetches and the collect phase
+    eats blocked waits. Recalibration measures the per-transfer time and
+    the real overlap window, sizes the required in-flight parallelism
+    (``core.calibration.required_inflight``) and grows the engine, and
+    re-plans on measured bandwidth — so the calibrated arm's fetches run
+    concurrently and the same waits come back overlapped. Reported per
+    arm: tokens/s, plan lead, hidden_fraction (per-arm trace slice);
+    ``scripts/ci.sh`` hard-asserts calibrated >= static on
+    hidden_fraction."""
+    row = worst_case_page_bytes(model.cache_specs(1, max_seq, jnp.float32))
+    topo = TierTopology(tiers=(
+        TierSpec("device", kind="device", capacity=1 * row),
+        TierSpec("pooled", kind="modeled", read_latency_s=6e-3),
+    ))
+    session = HyperOffloadSession(OffloadConfig(
+        mode="kv_offload", max_batch=max_batch, max_seq=max_seq,
+        prefill_budget=2, topology=topo,
+        telemetry=TelemetryConfig(enable=True)))
+    # pressure matters more than trace length here: enough concurrent
+    # rows (arrival rate ≥ 2/step, decodes long enough to overlap) that
+    # the one-row device tier spills parked pages every step — the
+    # measured in-flight need must genuinely exceed the default 2 workers
+    # for the loop to have anything to correct
+    n = max(8, requests)
+    mk = lambda: poisson_trace(
+        n, rate=max(2.0, rate), vocab_size=vocab_size, prompt_lens=(4, 8),
+        new_tokens=(6, 12), prompt_quantum=4, seed=seed)
+    out: Dict[str, object] = {
+        "tier_read_latency_s": topo.spec("pooled").read_latency_s,
+        "device_capacity_rows": max(1, max_batch // 4),
+    }
+    for arm in ("static", "calibrated"):
+        if arm == "calibrated":
+            spec = session.recalibrate()     # measured replan + worker sizing
+            out["hw_calibrated"] = spec.name
+            out["measured_r2d_bw"] = spec.pool_bw_r2d
+        sched = session.scheduler(model, params)
+        n0 = len(session.tracer.events())
+        t0 = time.perf_counter()
+        res = sched.run(mk())
+        wall = time.perf_counter() - t0
+        tokens = sum(len(v) for v in res.values())
+        ov = OverlapAnalyzer(session.tracer.events()[n0:]).report()
+        out[arm] = {
+            "tokens": tokens, "wall_s": wall,
+            "tokens_per_s": tokens / wall,
+            "plan_lead": sched.prefetch_stats()["mean_plan_lead"],
+            "transfers": ov["transfers"],
+            "hidden_s": ov["hidden_s"], "exposed_s": ov["exposed_s"],
+            "hidden_fraction": ov["hidden_fraction"],
+            "workers": session.transfer.workers,
+        }
+        sched.close()
+    session.close()
+    for arm in ("static", "calibrated"):
+        assert out[arm]["hidden_fraction"] is not None, \
+            f"calibration {arm} arm traced no transfer time"
+    return out
+
+
+# ---------------------------------------------------------------------------
 # SLO-aware scheduling vs FIFO under overload
 # ---------------------------------------------------------------------------
 
@@ -492,6 +569,13 @@ def main() -> None:
         max_seq=args.max_seq, chunk_size=args.chunk_size,
         seed=args.seed + 6)
 
+    # closed-loop calibration: static vs measured planning over a
+    # latency-dominated modeled tier (same trace both arms)
+    calibration = run_calibration_comparison(
+        model, params, requests=max(4, args.requests // 2), rate=args.rate,
+        vocab_size=cfg.vocab_size, max_batch=args.max_batch,
+        max_seq=args.max_seq, seed=args.seed + 10)
+
     # SLO-aware scheduling vs FIFO at 2-5x overload
     overload = run_overload_comparison(
         model, params, requests=args.requests, vocab_size=cfg.vocab_size,
@@ -504,7 +588,7 @@ def main() -> None:
         "max_batch": args.max_batch, "max_seq": args.max_seq,
         "static": static, "continuous": cont, "kv_offload": offload,
         "long_prompts": long_prompts, "prefix_cache": prefix_cache,
-        "overload": overload,
+        "calibration": calibration, "overload": overload,
         # the merged front-door snapshot: pool/transfer counters next to
         # the throughput numbers (tracked in BENCH_serving.json)
         "session": off_session.stats(),
@@ -548,6 +632,15 @@ def main() -> None:
           f"hit_rate:{px['hit_rate']:.2f},"
           f"tok/s_on:{px['on']['tokens_per_s']:.1f},"
           f"tok/s_off:{px['off']['tokens_per_s']:.1f}")
+    for arm in ("static", "calibrated"):
+        c = calibration[arm]
+        hf = c["hidden_fraction"]
+        print(f"serve_continuous,calibration_{arm},"
+              f"tok/s:{c['tokens_per_s']:.1f},"
+              f"plan_lead:{c['plan_lead']:.1f},"
+              f"workers:{c['workers']},"
+              f"hidden_fraction:"
+              f"{'n/a' if hf is None else format(hf, '.2f')}")
     for factor in ("2x", "3x", "5x"):
         fo, so = overload[factor]["fifo"], overload[factor]["slo"]
         f_tta = fo["attainment"]["classes"]["interactive"]["ttft_attainment"]

@@ -38,6 +38,22 @@ assert ov["hidden_fraction"] is not None, \
 print(f"ci,overlap,hidden_fraction:{ov['hidden_fraction']:.2f}")
 EOF
 
+# calibration gate: closing the planning loop on measured bandwidth must
+# hide at least as much transfer time as static planning on the same
+# trace — the modeled tier's latency is enforced, so this is the paper's
+# overlap claim as a hard assert, not a flaky perf check
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import json
+cal = json.load(open("BENCH_serving.json"))["calibration"]
+hs = cal["static"]["hidden_fraction"]
+hc = cal["calibrated"]["hidden_fraction"]
+assert hs is not None and hc is not None, "calibration arms traced nothing"
+assert hc >= hs, \
+    f"calibrated hidden_fraction {hc:.3f} < static {hs:.3f}"
+print(f"ci,calibration,hidden_fraction:{hs:.2f}->{hc:.2f},"
+      f"workers:{cal['static']['workers']}->{cal['calibrated']['workers']}")
+EOF
+
 # SLO gate: at 3x overload the SLO-aware scheduler must beat FIFO on
 # goodput (deadline-met tokens per virtual step) AND on interactive TTFT
 # attainment — both on the deterministic virtual clock, so this is a

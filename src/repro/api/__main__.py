@@ -31,6 +31,9 @@ def main(argv=None) -> int:
     d = cfg.to_dict()
     # the effective (mode-resolved) planner default is part of the surface
     d["insertion_resolved"] = cfg.insertion_options().__dict__
+    # likewise the effective tier chain (explicit topology, or the default
+    # three-tier chain built from the capacity fields)
+    d["topology_resolved"] = cfg.tier_topology.to_dict()
     print(json.dumps(d, indent=2, sort_keys=True, default=str))
     return 0
 

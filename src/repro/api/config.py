@@ -9,8 +9,14 @@ serializable object:
   device), ``kv_offload`` (whole-cache / per-page pool round trips),
   ``paged`` (page-granular `PagedKVCache` with sparse selection),
   ``continuous`` (continuous-batching scheduler, resident pages);
-- **tier topology** — byte capacities of the device/host/remote tiers
-  (``None`` = unbounded), realized as one `MemoryPoolManager`;
+- **tier topology** — either the legacy per-tier byte capacities of the
+  default device/host/remote chain (``None`` = unbounded), or a full
+  declarative ``TierTopology`` (ordered ``TierSpec`` chain with backend
+  kinds, admission roles and modeled latency/bandwidth), realized as one
+  `MemoryPoolManager`;
+- **calibration knobs** — thresholds the closed loop
+  (``session.recalibrate()``) applies when folding measured per-tier-pair
+  bandwidth back into the planner;
 - **hardware** — a `HardwareSpec` by registry name (serializable) or
   instance, driving the planner's cost model;
 - **planner knobs** — `InsertionOptions` / `ScheduleOptions`; ``None``
@@ -37,6 +43,7 @@ import jax.numpy as jnp
 from repro.core.costmodel import ASCEND_LIKE, TPU_V5E, HardwareSpec
 from repro.core.insertion import PAGED_INSERTION, InsertionOptions
 from repro.core.schedule import ScheduleOptions
+from repro.pool.topology import TierTopology
 from repro.pool.transfer import auto_depth
 from repro.slo.policy import SLOConfig
 
@@ -66,7 +73,9 @@ class PrefixCacheConfig:
     min_match_pages: int = 1       # shortest match worth taking
     # tier pinning policy: the lowest pool tier a cached page may age down
     # to; a page the pool spills below this floor is invalidated (cheaper
-    # to recompute than to fetch back)
+    # to recompute than to fetch back). Validated against the session's
+    # tier topology by OffloadConfig (the chain's names are declarative,
+    # not fixed, so this block alone can't know them).
     pin_tier: str = "host"
 
     def __post_init__(self) -> None:
@@ -77,10 +86,31 @@ class PrefixCacheConfig:
                 "prefix_cache.max_pages must be >= 1 (or None = unbounded)")
         if self.min_match_pages < 1:
             raise ValueError("prefix_cache.min_match_pages must be >= 1")
-        if self.pin_tier not in ("device", "host", "remote"):
-            raise ValueError(
-                f"prefix_cache.pin_tier {self.pin_tier!r} not in "
-                "('device', 'host', 'remote')")
+        if not self.pin_tier or not isinstance(self.pin_tier, str):
+            raise ValueError("prefix_cache.pin_tier must be a tier name")
+
+
+@dataclass(frozen=True)
+class CalibrationConfig:
+    """Closed-loop calibration knobs (``core.calibration``), applied by
+    ``HyperOffloadSession.recalibrate()``: eligibility thresholds before a
+    measured tier pair is trusted over the static spec (one tiny probe
+    transfer is all fixed overhead — it would poison the bandwidth
+    estimate), and the ceiling on how much in-flight transfer parallelism
+    the loop may grow the engine to (the bandwidth-delay-product sizing is
+    measured, but worker threads are a real resource)."""
+
+    min_transfers: int = 2         # per-pair transfers before trusting it
+    min_bytes: int = 1024          # per-pair bytes before trusting it
+    max_inflight: int = 64         # ceiling for measured in-flight sizing
+
+    def __post_init__(self) -> None:
+        if self.min_transfers < 1:
+            raise ValueError("calibration.min_transfers must be >= 1")
+        if self.min_bytes < 0:
+            raise ValueError("calibration.min_bytes must be >= 0")
+        if self.max_inflight < 1:
+            raise ValueError("calibration.max_inflight must be >= 1")
 
 
 @dataclass(frozen=True)
@@ -121,11 +151,17 @@ class OffloadConfig:
 
     mode: str = "resident"
 
-    # -- hardware + tier topology (bytes; None = unbounded) -------------
+    # -- hardware + tier topology ---------------------------------------
     hw: Union[str, HardwareSpec] = TPU_V5E.name
+    # either a full declarative chain...
+    topology: Optional[TierTopology] = None
+    # ...or the legacy per-tier capacities of the default chain (bytes;
+    # None = unbounded). Mutually exclusive with an explicit topology.
     device_capacity: Optional[int] = None
     host_capacity: Optional[int] = None
     remote_capacity: Optional[int] = None
+    # closed-loop calibration knobs (session.recalibrate())
+    calibration: CalibrationConfig = field(default_factory=CalibrationConfig)
 
     # -- transfer depth policy ------------------------------------------
     transfer_depth: Union[str, int] = "auto"   # "auto" = f(pages, layers)
@@ -203,11 +239,40 @@ class OffloadConfig:
             raise ValueError(
                 "slo.enable requires a scheduler mode ('continuous' or "
                 f"'kv_offload'), got mode={self.mode!r}")
+        if self.topology is not None:
+            if not isinstance(self.topology, TierTopology):
+                raise ValueError(
+                    "topology must be a TierTopology (build one with "
+                    "TierTopology(tiers=(TierSpec(...), ...)))")
+            if any(c is not None for c in (self.device_capacity,
+                                           self.host_capacity,
+                                           self.remote_capacity)):
+                raise ValueError(
+                    "pass tier capacities inside the topology's TierSpecs, "
+                    "not alongside an explicit topology")
+        # only an *enabled* prefix cache must name a real tier — the
+        # default pin ("host") shouldn't invalidate every custom chain
+        if self.prefix_cache.enable:
+            names = self.tier_topology.names
+            if self.prefix_cache.pin_tier not in names:
+                raise ValueError(
+                    f"prefix_cache.pin_tier {self.prefix_cache.pin_tier!r} "
+                    f"not a tier of the topology {names}")
 
     # ------------------------------------------------------------------
     @property
     def hardware(self) -> HardwareSpec:
         return HW_SPECS[self.hw] if isinstance(self.hw, str) else self.hw
+
+    @property
+    def tier_topology(self) -> TierTopology:
+        """The effective chain: the explicit topology, else the default
+        device/host/remote chain under the legacy capacity fields."""
+        if self.topology is not None:
+            return self.topology
+        return TierTopology.default(device_capacity=self.device_capacity,
+                                    host_capacity=self.host_capacity,
+                                    remote_capacity=self.remote_capacity)
 
     @property
     def offload_kv(self) -> bool:
@@ -257,6 +322,11 @@ class OffloadConfig:
         hw = kwargs.get("hw")
         if isinstance(hw, dict):
             kwargs["hw"] = HardwareSpec(**hw)
+        if isinstance(kwargs.get("topology"), dict):
+            kwargs["topology"] = TierTopology.from_dict(kwargs["topology"])
+        if isinstance(kwargs.get("calibration"), dict):
+            kwargs["calibration"] = _options_from(CalibrationConfig,
+                                                  kwargs["calibration"])
         if isinstance(kwargs.get("insertion"), dict):
             kwargs["insertion"] = _options_from(InsertionOptions,
                                                 kwargs["insertion"])

@@ -42,13 +42,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.api.config import OffloadConfig
+from repro.core.calibration import (
+    CalibratedHardwareSpec, calibrate, measurements_from_pairs,
+    required_inflight,
+)
 from repro.core.insertion import PAGED_INSERTION
 from repro.core.ir import Graph
 from repro.core.jax_exec import PlanExecutor
 from repro.core.planner import HyperOffloadPlanner, OffloadPlan
 from repro.obs import NULL_TRACER, MetricsRegistry, OverlapAnalyzer, Tracer
 from repro.offload.kvcache import PagedKVCache
-from repro.pool import MemoryPoolManager, default_pool
+from repro.pool import DEVICE_TIER, MemoryPoolManager, default_pool
 from repro.prefix import PrefixCacheManager
 from repro.sched.scheduler import ContinuousScheduler, SchedulerConfig
 from repro.serving.engine import ServeEngine
@@ -86,10 +90,10 @@ class HyperOffloadSession:
                        if c.telemetry.enable else NULL_TRACER)
         self._owns_pool = pool is None
         if pool is None:
+            # the config's declarative tier chain (explicit topology, or
+            # the default device/host/remote under the legacy capacities)
             pool = default_pool(
-                device_capacity=c.device_capacity,
-                host_capacity=c.host_capacity,
-                remote_capacity=c.remote_capacity,
+                topology=c.tier_topology,
                 device=device,
                 transfer_depth=c.depth_for(),
                 transfer_workers=c.transfer_workers,
@@ -103,8 +107,11 @@ class HyperOffloadSession:
             # grow an explicitly configured depth
             self.transfer.ensure_depth(c.depth_for())
             self.transfer.depth_pinned = True
+        # the session's *effective* hardware model: starts as the config's
+        # static spec; recalibrate() swaps in a measured one
+        self.hw = c.hardware
         self.planner = HyperOffloadPlanner(
-            c.hardware, insert_opts=c.insertion_options(),
+            self.hw, insert_opts=c.insertion_options(),
             sched_opts=c.schedule)
         self._plan_cache: Dict[Any, OffloadPlan] = {}
         self._engines: List[ServeEngine] = []
@@ -207,6 +214,76 @@ class HyperOffloadSession:
             self._plan_cache[cache_key] = plan
         return plan
 
+    # -- closed-loop calibration ----------------------------------------
+    def _overlap_window_s(self) -> float:
+        """Measured overlap window per scheduler step: the
+        ``admit_prefill`` span is the host work that sits between one
+        step's fetch issue and the next step's wait, i.e. the time budget
+        a step's transfers have to hide under. The *median* span, not the
+        mean — first-admission spans absorb prefill compilation (hundreds
+        of ms against a sub-ms typical step) and a mean window inflated
+        by them would under-size prefetch parallelism for every steady
+        step. 0.0 without telemetry or before any step ran."""
+        durs = sorted(e.dur for e in self.tracer.events()
+                      if e.cat == "sched" and e.name == "admit_prefill")
+        if not durs:
+            return 0.0
+        n = len(durs)
+        mid = n // 2
+        return durs[mid] if n % 2 else (durs[mid - 1] + durs[mid]) / 2.0
+
+    def recalibrate(self) -> CalibratedHardwareSpec:
+        """Close the planning loop against measured reality.
+
+        Folds the transfer engine's per tier-pair byte/busy-time table
+        (every prefetch, put, spill and blocking get the hierarchy has
+        performed so far) into a `CalibratedHardwareSpec`
+        (``core.calibration``), then:
+
+        - swaps the session planner for one running on the measured spec
+          (every subsequent ``plan()`` uses measured transfer estimates);
+        - re-plans every live scheduler (``ContinuousScheduler.replan``) so
+          refined prefetch orders and plan leads reflect measured
+          bandwidth — the calibrated spec's distinct name also keys fresh
+          plan-cache entries, never aliasing static plans;
+        - sizes prefetch parallelism to the measured bandwidth-delay
+          product: if completing one step's fetches inside the measured
+          overlap window needs more in-flight transfers than the engine
+          has workers, the engine grows (up to
+          ``config.calibration.max_inflight``). On a latency-dominated
+          modeled tier this is the difference between serialized sleeps
+          (exposed waits) and fully hidden transfers.
+
+        Idempotent under unchanged traffic; cheap enough to call between
+        benchmark phases or on a serving-loop cadence. Returns the
+        calibrated spec (``pair_bw`` carries the measured table)."""
+        cal = self.config.calibration
+        measurements = measurements_from_pairs(
+            self.transfer.stats.snapshot()["pairs"])
+        spec = calibrate(self.hw, measurements,
+                         device_tier=DEVICE_TIER,
+                         min_transfers=cal.min_transfers,
+                         min_bytes=cal.min_bytes)
+        self.hw = spec
+        self.planner = self.planner.with_hardware(spec)
+        # measured in-flight sizing: worst per-step fetch fan-out across
+        # the schedulers vs the measured per-step overlap window
+        pages_per_step = max(
+            (s.prefetcher.stats.mean_fetches_per_step
+             for s in self._schedulers if s.prefetcher is not None),
+            default=0.0)
+        window = self._overlap_window_s()
+        need = required_inflight(
+            measurements, pages_per_step=pages_per_step, window_s=window,
+            device_tier=DEVICE_TIER, cap=cal.max_inflight,
+            min_transfers=cal.min_transfers, min_bytes=cal.min_bytes)
+        if need > 0:
+            self.transfer.ensure_workers(need)
+            self.transfer.ensure_depth(need)
+        for s in self._schedulers:
+            s.replan(spec)
+        return spec
+
     # -- serving --------------------------------------------------------
     def serve_engine(self, model, params, *, max_seq: Optional[int] = None,
                      cache_dtype=None,
@@ -237,7 +314,7 @@ class HyperOffloadSession:
                 max_batch=c.max_batch, max_seq=c.max_seq,
                 prefill_budget=c.prefill_budget, chunk_size=c.chunk_size,
                 prefill_tokens=c.prefill_tokens, kv_offload=c.offload_kv,
-                cache_dtype=c.dtype, hw=c.hardware,
+                cache_dtype=c.dtype, hw=self.hw,
                 insert_opts=c.insertion_options(), refine=c.refine,
                 slo=c.slo if c.slo.enable else None)
             base.update(overrides)

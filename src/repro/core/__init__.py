@@ -12,10 +12,15 @@ layer-level IR:
 - ``schedule``   — Algorithm 1: graph-driven execution-order optimization
 - ``timeline``   — dual-stream (compute + DMA) execution timeline simulator
 - ``planner``    — end-to-end pipeline producing an OffloadPlan
+- ``calibration``— measured transfer telemetry → CalibratedHardwareSpec
 - ``tracer``     — ModelConfig → layer-level graphs (train/prefill/decode)
 - ``jax_exec``   — execute a plan on real JAX arrays with a host-side pool
 """
 
+from repro.core.calibration import (
+    CalibratedHardwareSpec, TierPairMeasurement, calibrate,
+    measurements_from_pairs, required_inflight,
+)
 from repro.core.costmodel import HardwareSpec, ASCEND_LIKE, TPU_V5E
 from repro.core.ir import Graph, Node, TensorInfo
 from repro.core.planner import HyperOffloadPlanner, OffloadPlan
@@ -27,6 +32,11 @@ __all__ = [
     "HardwareSpec",
     "ASCEND_LIKE",
     "TPU_V5E",
+    "CalibratedHardwareSpec",
+    "TierPairMeasurement",
+    "calibrate",
+    "measurements_from_pairs",
+    "required_inflight",
     "HyperOffloadPlanner",
     "OffloadPlan",
 ]

@@ -61,6 +61,15 @@ class HyperOffloadPlanner:
         self.sched_opts = sched_opts
         self.reactive_capacity = reactive_capacity
 
+    def with_hardware(self, hw: HardwareSpec) -> "HyperOffloadPlanner":
+        """The same planning policy under a different hardware model — the
+        calibration loop swaps in a ``CalibratedHardwareSpec`` this way so
+        every subsequent plan's transfer estimates are measured, not
+        assumed."""
+        return HyperOffloadPlanner(hw, insert_opts=self.insert_opts,
+                                   sched_opts=self.sched_opts,
+                                   reactive_capacity=self.reactive_capacity)
+
     def plan(self, graph: Graph, refine: bool = True) -> OffloadPlan:
         base = graph.residentize()
         base_tl = timeline.simulate(base, self.hw)

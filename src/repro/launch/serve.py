@@ -3,7 +3,11 @@
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
         --prompt-len 32 --new-tokens 32 --batch 4 [--mode kv_offload]
 
-``--mode`` selects the `OffloadConfig` mode.
+``--mode`` selects the `OffloadConfig` mode. ``--remote-bw GB/s`` swaps
+the default topology's remote tier for a bandwidth-throttled modeled tier
+(the paper's Fig. 6 D2H sweep, one point per invocation), and
+``--recalibrate`` re-runs the generation after feeding the measured
+per-tier-pair bandwidths back into planning.
 """
 
 from __future__ import annotations
@@ -18,6 +22,7 @@ from repro.api import HyperOffloadSession, OffloadConfig
 from repro.configs import REGISTRY
 from repro.data.pipeline import SyntheticTokens
 from repro.models.model import build_model
+from repro.pool import TierTopology, sweep_topologies
 
 
 def main(argv=None) -> int:
@@ -33,6 +38,12 @@ def main(argv=None) -> int:
                     default="resident")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--remote-bw", type=float, default=None, metavar="GBPS",
+                    help="throttle the remote tier's read bandwidth to this "
+                         "many GB/s (modeled tier; Fig.-6-style sweep point)")
+    ap.add_argument("--recalibrate", action="store_true",
+                    help="after the run, replan from measured per-tier-pair "
+                         "bandwidths and generate once more")
     args = ap.parse_args(argv)
     mode = args.mode
 
@@ -46,8 +57,14 @@ def main(argv=None) -> int:
     batch = data.batch(0, cfg)
     batch.pop("targets", None)
 
+    topology = None
+    if args.remote_bw is not None:
+        topology, = sweep_topologies(
+            TierTopology.default(), "remote",
+            read_bws=[args.remote_bw * 1e9])
     config = OffloadConfig(mode=mode, max_batch=args.batch,
-                           max_seq=args.prompt_len + args.new_tokens)
+                           max_seq=args.prompt_len + args.new_tokens,
+                           topology=topology)
     with HyperOffloadSession(config) as session:
         engine = session.serve_engine(model, params)
         t0 = time.time()
@@ -56,11 +73,22 @@ def main(argv=None) -> int:
         dt = time.time() - t0
         toks = args.batch * args.new_tokens
         print(f"arch={cfg.name} mode={mode} "
+              f"tiers={'/'.join(session.pool.spill_order)} "
               f"generated {out.shape} in {dt:.2f}s ({toks/dt:.1f} tok/s)")
         print("first sequence:", out[0].tolist())
         s = session.stats()
         print(f"stats: {s['serve']} pool_puts={s['pool']['puts']} "
               f"pool_gets={s['pool']['gets']}")
+        if args.recalibrate:
+            spec = session.recalibrate()
+            t0 = time.time()
+            out = engine.generate(batch, args.new_tokens,
+                                  temperature=args.temperature,
+                                  seed=args.seed)
+            dt2 = time.time() - t0
+            print(f"recalibrated hw={spec.name} "
+                  f"d2r={spec.pool_bw_d2r:.3g}B/s r2d={spec.pool_bw_r2d:.3g}B/s "
+                  f"rerun {dt2:.2f}s ({toks/dt2:.1f} tok/s)")
     return 0
 
 

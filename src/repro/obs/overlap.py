@@ -6,8 +6,10 @@ latency behind compute-intensive regions. The aggregate counters
 often a consumer found its transfer done; this analyzer reconstructs the
 *time decomposition* from the trace:
 
-- every transfer emits a ``transfer`` span (issue → complete) carrying its
-  handle ``seq`` and source/destination tiers;
+- every transfer emits a ``transfer`` span (execution start → complete —
+  queue time is excluded, so it can't masquerade as hidden time; it shows
+  up as ``transfer.backpressure`` instead) carrying its handle ``seq`` and
+  source/destination tiers;
 - every first consumer wait emits a ``transfer.wait`` span (wait start →
   wait end) with ``hit`` = the transfer was already done.
 

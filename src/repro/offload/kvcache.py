@@ -31,9 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.pool import (
-    HOST_TIER, MemoryPoolManager, TransferHandle, auto_depth,
-)
+from repro.pool import MemoryPoolManager, TransferHandle, auto_depth
 
 NEG_INF = -2.3819763e38
 
@@ -202,8 +200,8 @@ class PagedKVCache:
         # recent pages rank higher for sparse selection → keep them closest
         kk = f"{self.key_ns}/k{page_idx}"
         vk = f"{self.key_ns}/v{page_idx}"
-        self.pool.put(kk, k_page, HOST_TIER, priority=float(page_idx))
-        self.pool.put(vk, v_page, HOST_TIER, priority=float(page_idx))
+        self.pool.put(kk, k_page, priority=float(page_idx))
+        self.pool.put(vk, v_page, priority=float(page_idx))
         self.k_pool[page_idx] = kk
         self.v_pool[page_idx] = vk
         self.flushes += 1

@@ -1,10 +1,13 @@
 """Runtime memory-pool subsystem (§5 remote memory backend).
 
+- ``topology`` — declarative ``TierTopology``: the spill chain as an
+  ordered list of ``TierSpec``s (backend kind, capacity, admission role,
+  modeled latency/bandwidth) instead of hard-coded tier strings;
 - ``backend``  — tiered memory backends (device HBM / host memory-kind
-  shardings / NumPy simulated remote pool) behind one interface, with
-  per-device capability probing and graceful fallback;
+  shardings / sleep-throttled modeled disaggregated tier) behind one
+  interface, with per-device capability probing and graceful fallback;
 - ``manager``  — capacity-tracked ``MemoryPoolManager`` with
-  priority+LRU eviction that spills down the tier hierarchy;
+  priority+LRU eviction that spills down the declared tier chain;
 - ``transfer`` — async double-buffered ``TransferEngine`` with explicit
   wait handles (prefetches genuinely overlap compute);
 - ``executor`` — ``OffloadPlanExecutor`` runs a planned graph's refined
@@ -14,9 +17,11 @@
 
 from repro.pool.backend import (
     DEVICE_TIER, HOST_TIER, REMOTE_TIER,
-    capabilities, device_sharding, host_memory_kind, host_sharding,
-    is_host_resident, make_backend, make_host_backend, to_device, to_host,
+    ModeledTierBackend, backend_for, capabilities, device_sharding,
+    host_memory_kind, host_sharding, is_host_resident, make_backend,
+    make_host_backend, to_device, to_host,
 )
+from repro.pool.topology import TierSpec, TierTopology, sweep_topologies
 from repro.pool.manager import (
     MemoryPoolManager, PoolCapacityError, PoolEntry, TierState, default_pool,
 )
@@ -27,9 +32,11 @@ from repro.pool.executor import ExecutionTrace, OffloadPlanExecutor
 
 __all__ = [
     "DEVICE_TIER", "HOST_TIER", "REMOTE_TIER",
+    "ModeledTierBackend", "backend_for",
     "capabilities", "device_sharding", "host_memory_kind", "host_sharding",
     "is_host_resident", "make_backend", "make_host_backend",
     "to_device", "to_host",
+    "TierSpec", "TierTopology", "sweep_topologies",
     "MemoryPoolManager", "PoolCapacityError", "PoolEntry", "TierState",
     "default_pool",
     "TransferEngine", "TransferHandle", "TransferStats", "auto_depth",

@@ -1,14 +1,19 @@
 """Tiered memory backends behind one interface (§5 remote memory backend).
 
-Three tiers mirror the paper's hierarchy:
+Backends are selected per-tier by a declarative ``TierSpec.kind``
+(``pool.topology``); the default chain mirrors the paper's hierarchy:
 
 - **device** — accelerator HBM (JAX default memory);
 - **host**   — ``pinned_host`` memory-kind shardings where the platform
   supports them (TPU/GPU), degrading to ``unpinned_host`` and finally to
   plain NumPy host buffers where memory-kind shardings raise (XLA:CPU only
   addresses ``unpinned_host``; some builds address nothing but the default);
-- **remote** — the simulated remote pool: NumPy buffers standing in for the
-  CloudMatrix pooled-DRAM tier, always available.
+- **modeled** — the disaggregated pooled-DRAM stand-in (CloudMatrix /
+  CXL-hybrid tier): NumPy storage behind a sleep-throttle that *enforces*
+  the spec's per-direction bandwidth and latency, so the runtime feels —
+  and the telemetry measures — a configurable transfer character instead
+  of whatever the host happens to do. Unthrottled it degenerates to the
+  old plain-NumPy remote tier.
 
 Capability probing happens once per device and is cached; every offload
 call site (kv pages, optimizer moments, plan execution) routes through the
@@ -19,6 +24,7 @@ why the seed's offload runtime failed on CPU backends.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
 from typing import Any, Optional, Tuple
 
@@ -217,6 +223,72 @@ class NumpyHostBackend(MemoryBackend):
         return isinstance(handle, np.ndarray)
 
 
+class ModeledTierBackend(MemoryBackend):
+    """The modeled disaggregated tier: NumPy storage behind a throttle
+    that enforces a configured transfer character. Each ``put`` sleeps out
+    the remainder of ``write_latency_s + nbytes/write_bw`` past the time
+    the real copy took (``get`` likewise with the read-direction numbers,
+    after blocking until the device copy lands — enforced timing must
+    cover the actual data movement, not an async dispatch). A ``None``
+    bandwidth with zero latency disables the throttle for that direction,
+    so an unthrottled modeled tier behaves exactly like the historical
+    plain-NumPy remote tier.
+
+    Throttling is per-transfer and independent across engine worker
+    threads — concurrent transfers genuinely overlap, which is what makes
+    the tier sweepable like a real link: aggregate throughput scales with
+    in-flight parallelism up to the bandwidth-delay product, the dynamic
+    the calibration loop (``core.calibration``) sizes prefetch workers
+    against."""
+
+    def __init__(self, device=None, *, read_bw: Optional[float] = None,
+                 write_bw: Optional[float] = None,
+                 read_latency_s: float = 0.0,
+                 write_latency_s: float = 0.0,
+                 name: str = "modeled") -> None:
+        self.device = device if device is not None else jax.devices()[0]
+        self._dev = device_sharding(self.device)
+        self.read_bw = read_bw
+        self.write_bw = write_bw
+        self.read_latency_s = float(read_latency_s)
+        self.write_latency_s = float(write_latency_s)
+        self.name = name
+
+    @property
+    def throttled(self) -> bool:
+        return (self.read_bw is not None or self.write_bw is not None
+                or self.read_latency_s > 0 or self.write_latency_s > 0)
+
+    @staticmethod
+    def _throttle(t0: float, nbytes: int, bw: Optional[float],
+                  latency_s: float) -> None:
+        if bw is None and latency_s <= 0:
+            return
+        want = latency_s + (nbytes / bw if bw is not None else 0.0)
+        remaining = want - (time.perf_counter() - t0)
+        if remaining > 0:
+            time.sleep(remaining)
+
+    def put(self, value) -> np.ndarray:
+        t0 = time.perf_counter()
+        handle = np.asarray(value)   # blocks until the device→host copy lands
+        self._throttle(t0, int(handle.nbytes), self.write_bw,
+                       self.write_latency_s)
+        return handle
+
+    def get(self, handle) -> jax.Array:
+        t0 = time.perf_counter()
+        value = jax.device_put(handle, self._dev)
+        if self.read_bw is not None or self.read_latency_s > 0:
+            value.block_until_ready()
+            self._throttle(t0, int(handle.nbytes), self.read_bw,
+                           self.read_latency_s)
+        return value
+
+    def holds(self, handle) -> bool:
+        return isinstance(handle, np.ndarray)
+
+
 def make_host_backend(device=None) -> MemoryBackend:
     """The best host-tier backend this platform supports."""
     if host_memory_kind(device) is not None:
@@ -232,3 +304,22 @@ def make_backend(tier: str, device=None) -> MemoryBackend:
     if tier == REMOTE_TIER:
         return NumpyHostBackend(device)
     raise ValueError(f"unknown tier {tier!r}")
+
+
+def backend_for(spec, device=None) -> MemoryBackend:
+    """Storage backend for one ``TierSpec`` (duck-typed on its fields —
+    the spec type lives in ``pool.topology``; the dependency points this
+    way so the topology module stays pure data)."""
+    if spec.kind == "device":
+        return DeviceBackend(device)
+    if spec.kind == "host":
+        return make_host_backend(device)
+    if spec.kind == "numpy":
+        return NumpyHostBackend(device)
+    if spec.kind == "modeled":
+        return ModeledTierBackend(
+            device, read_bw=spec.read_bw, write_bw=spec.write_bw,
+            read_latency_s=spec.read_latency_s,
+            write_latency_s=spec.write_latency_s,
+            name=f"modeled[{spec.name}]")
+    raise ValueError(f"unknown tier kind {spec.kind!r}")

@@ -66,14 +66,16 @@ class OffloadPlanExecutor:
 
     def __init__(self, plan, pool: Optional[MemoryPoolManager] = None,
                  compute_fns: Optional[Mapping[str, Callable]] = None,
-                 store_tier: str = B.HOST_TIER) -> None:
+                 store_tier: Optional[str] = None) -> None:
         if isinstance(plan, Graph):
             self.graph, self.default_order = plan, plan.order()
         else:  # OffloadPlan (duck-typed: avoids a core←pool import cycle)
             self.graph, self.default_order = plan.graph, list(plan.order)
         self.pool = pool if pool is not None else default_pool()
         self.fns = dict(compute_fns or {})
-        self.store_tier = store_tier
+        # default: wherever the pool's topology says offloaded stores land
+        self.store_tier = (store_tier if store_tier is not None
+                           else self.pool.default_store_tier)
         self._key_ns = f"exec{next(_EXEC_IDS)}"
 
     def _key(self, tensor: str) -> str:

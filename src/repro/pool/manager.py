@@ -1,12 +1,15 @@
 """Capacity-tracked memory-pool manager over the tiered backends.
 
-``MemoryPoolManager`` owns an ordered sequence of tiers (host → remote by
-default, optionally device-HBM first). Each ``put`` is charged against the
-tier's byte capacity; when a tier is full, victims are chosen by
-(planner priority, then LRU) among unpinned entries and **spilled** to the
-next tier down — the paper's hierarchy: HBM overflows to the local host
-pool, the host pool overflows to the remote pooled-DRAM tier. Only when
-the last tier is full does a put fail with ``PoolCapacityError``.
+``MemoryPoolManager`` owns an ordered spill chain of tiers, described
+declaratively by a ``TierTopology`` (``default_pool`` builds the
+historical device → host → remote chain when none is given). Each ``put``
+is charged against the tier's byte capacity; when a tier is full, victims
+are chosen by (planner priority, then LRU) among unpinned entries and
+**spilled** to the next tier down the chain — the paper's hierarchy: HBM
+overflows to the local host pool, the host pool overflows to the remote
+pooled-DRAM tier — and an N-tier topology spills the same way, link by
+link. Only when the last tier is full does a put fail with
+``PoolCapacityError``.
 
 Priorities are the planner's hint channel: the executor can mark a tensor
 it will prefetch soon with a high priority so reactive churn never evicts
@@ -14,17 +17,22 @@ it — the graph-driven/reactive distinction at the heart of the paper.
 
 All traffic is counted (puts/gets/evictions, bytes in/out, per-tier
 occupancy and high-water mark); serving and benchmarks surface these via
-``stats.snapshot()``.
+``stats.snapshot()``. Synchronous movement (puts, spills, blocking gets)
+additionally lands in the transfer engine's per tier-pair table, so the
+calibration loop sees every byte the hierarchy moves, not just the async
+prefetches.
 """
 
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.obs.trace import NULL_TRACER
 from repro.pool import backend as B
+from repro.pool.topology import TierTopology
 from repro.pool.transfer import TransferEngine, TransferHandle
 
 
@@ -72,11 +80,16 @@ class PoolStats:
 class MemoryPoolManager:
     def __init__(self, tiers: Sequence[TierState],
                  transfer: Optional[TransferEngine] = None,
-                 tracer=None) -> None:
+                 tracer=None, topology: Optional[TierTopology] = None) -> None:
         if not tiers:
             raise ValueError("need at least one tier")
         self.tiers: Dict[str, TierState] = {t.name: t for t in tiers}
         self.spill_order: List[str] = [t.name for t in tiers]
+        self.topology = topology
+        if topology is not None and list(topology.names) != self.spill_order:
+            raise ValueError(
+                f"topology names {topology.names} do not match tier states "
+                f"{self.spill_order}")
         self.entries: Dict[str, PoolEntry] = {}
         self.transfer = transfer or TransferEngine()
         self.tracer = tracer if tracer is not None else NULL_TRACER
@@ -96,12 +109,50 @@ class MemoryPoolManager:
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.transfer.set_tracer(tracer)
 
+    # -- topology-derived roles ----------------------------------------
+    @property
+    def top_tier(self) -> str:
+        """The chain's fastest tier — where compute-resident pages park."""
+        return self.spill_order[0]
+
+    @property
+    def default_store_tier(self) -> str:
+        """Where ``put`` lands when the caller names no tier: the
+        topology's declared store tier, else the historical ``host``
+        default when such a tier exists, else the first off-accelerator
+        tier of the chain."""
+        if self.topology is not None:
+            return self.topology.default_store_tier
+        if B.HOST_TIER in self.tiers:
+            return B.HOST_TIER
+        for name in self.spill_order:
+            if not isinstance(self._tier(name).backend, B.DeviceBackend):
+                return name
+        return self.spill_order[-1]
+
+    @property
+    def admission_tiers(self) -> Tuple[str, ...]:
+        """Tiers admission control may count a request's worst-case pages
+        against (``sched.queue.AdmissionController``) — declared per-spec
+        in the topology; for topology-less pools, the historical
+        device+host pair (every tier above the last as a fallback)."""
+        if self.topology is not None:
+            return self.topology.admission_tiers
+        legacy = tuple(n for n in self.spill_order
+                       if n in (B.DEVICE_TIER, B.HOST_TIER))
+        if legacy:
+            return legacy
+        return tuple(self.spill_order[:-1]) or (self.spill_order[0],)
+
     # -- storing -------------------------------------------------------
-    def put(self, key: str, value, tier: str = B.HOST_TIER, *,
+    def put(self, key: str, value, tier: Optional[str] = None, *,
             priority: float = 0.0, pinned: bool = False) -> PoolEntry:
-        """Store ``value`` into ``tier``, evicting (spilling down-hierarchy)
+        """Store ``value`` into ``tier`` (default: the pool's
+        ``default_store_tier``), evicting (spilling down-hierarchy)
         as needed. Re-putting an existing key replaces it; if the new value
         doesn't fit, the old entry survives untouched."""
+        if tier is None:
+            tier = self.default_store_tier
         t0 = self.tracer.now() if self.tracer.enabled else 0.0
         with self._lock:
             st = self._tier(tier)
@@ -116,7 +167,13 @@ class MemoryPoolManager:
                     self.entries[key] = old
                     self._tier(old.tier).used += old.nbytes
                 raise
+            t_x = time.perf_counter()
             handle = st.backend.put(value)
+            if not isinstance(st.backend, B.DeviceBackend):
+                # value arrives device-side; a store into any lower tier is
+                # measured d2r traffic the calibration table should see
+                self.transfer.record_pair(B.DEVICE_TIER, tier, nbytes,
+                                          time.perf_counter() - t_x)
             self._clock += 1
             entry = PoolEntry(key=key, tier=tier, handle=handle,
                               nbytes=nbytes, priority=priority,
@@ -143,7 +200,11 @@ class MemoryPoolManager:
             self.stats.gets += 1
             self.stats.bytes_fetched += entry.nbytes
             backend, handle = self._tier(entry.tier).backend, entry.handle
+        t_x = time.perf_counter()
         value = backend.get(handle)
+        if not isinstance(backend, B.DeviceBackend):
+            self.transfer.record_pair(entry.tier, B.DEVICE_TIER, entry.nbytes,
+                                      time.perf_counter() - t_x)
         if self.tracer.enabled:
             self.tracer.complete("pool", "fetch", t0, self.tracer.now() - t0,
                                  {"key": key, "tier": entry.tier,
@@ -168,7 +229,7 @@ class MemoryPoolManager:
             return backend.get(handle)
 
         return self.transfer.submit(fetch, key=key, src=src,
-                                    dst=B.DEVICE_TIER)
+                                    dst=B.DEVICE_TIER, nbytes=entry.nbytes)
 
     # -- bookkeeping ---------------------------------------------------
     def close(self) -> None:
@@ -362,7 +423,10 @@ class MemoryPoolManager:
                 f"cannot evict {entry.key!r}: {entry.tier!r} is the last tier")
         src_st, dst_st = self._tier(entry.tier), self._tier(dst)
         self._make_room(dst_st, entry.nbytes)
+        t_x = time.perf_counter()
         entry.handle = dst_st.backend.put(entry.handle)
+        self.transfer.record_pair(src_st.name, dst, entry.nbytes,
+                                  time.perf_counter() - t_x)
         src_st.used -= entry.nbytes
         dst_st.used += entry.nbytes
         dst_st.peak = max(dst_st.peak, dst_st.used)
@@ -385,19 +449,33 @@ def default_pool(host_capacity: Optional[int] = None,
                  device_capacity: Optional[int] = None,
                  device=None,
                  transfer: Optional[TransferEngine] = None, *,
+                 topology: Optional[TierTopology] = None,
                  transfer_depth: Optional[int] = None,
                  transfer_workers: int = 2,
                  tracer=None) -> MemoryPoolManager:
-    """The standard three-tier pool: device HBM → host → simulated remote.
+    """Build a pool from a declarative ``TierTopology`` — by default the
+    standard three-tier chain: device HBM → host → modeled remote
+    (unthrottled, i.e. the historical simulated-remote behavior).
+
+    Capacities may be passed either through the legacy per-tier kwargs (the
+    default chain only) or inside an explicit ``topology``'s specs — never
+    both.
 
     ``transfer_depth``/``transfer_workers`` build the engine here so callers
     outside the pool subsystem never construct a ``TransferEngine`` — depth
     comes from ``transfer.auto_depth`` (or ``OffloadConfig``)."""
+    if topology is None:
+        topology = TierTopology.default(device_capacity=device_capacity,
+                                        host_capacity=host_capacity,
+                                        remote_capacity=remote_capacity)
+    elif any(c is not None for c in (host_capacity, remote_capacity,
+                                     device_capacity)):
+        raise ValueError(
+            "pass capacities inside the topology's TierSpecs, not alongside "
+            "an explicit topology")
     if transfer is None and transfer_depth is not None:
         transfer = TransferEngine(depth=transfer_depth, workers=transfer_workers)
-    tiers = [
-        TierState(B.DEVICE_TIER, B.DeviceBackend(device), device_capacity),
-        TierState(B.HOST_TIER, B.make_host_backend(device), host_capacity),
-        TierState(B.REMOTE_TIER, B.NumpyHostBackend(device), remote_capacity),
-    ]
-    return MemoryPoolManager(tiers, transfer=transfer, tracer=tracer)
+    tiers = [TierState(s.name, B.backend_for(s, device), s.capacity)
+             for s in topology.tiers]
+    return MemoryPoolManager(tiers, transfer=transfer, tracer=tracer,
+                             topology=topology)

@@ -14,12 +14,22 @@ overlapped) from waits that blocked (exposed transfer time) — the runtime
 counterpart of ``Timeline.exposed_comm``.
 
 With a tracer attached (``repro.obs``) every handle additionally emits two
-trace spans: ``transfer`` (issue → complete, tagged with its source/
-destination tiers) from the worker thread, and ``transfer.wait`` (first
-consumer wait, tagged hit/blocked) from the consumer — the raw material
-``obs.OverlapAnalyzer`` decomposes into hidden vs exposed transfer time.
-The wait span's duration is the *same measurement* added to ``blocked_s``,
-so trace and counters can be cross-validated exactly.
+trace spans: ``transfer`` (execution start → complete on the worker
+thread, tagged with its source/destination tiers — queue time spent
+waiting for a worker is *excluded*, it shows up as backpressure/in-flight
+depth instead, so a saturated engine can't masquerade queueing delay as
+hidden transfer time) and ``transfer.wait`` (first consumer wait, tagged
+hit/blocked) from the consumer — the raw material ``obs.OverlapAnalyzer``
+decomposes into hidden vs exposed transfer time. The wait span's duration
+is the *same measurement* added to ``blocked_s``, so trace and counters
+can be cross-validated exactly.
+
+Per tier-pair byte/busy-time accounting (``TransferStats.pairs``) feeds
+the calibration loop (``core.calibration``): every transfer that declares
+``src``/``dst`` and a byte count records its measured execution time under
+``"src->dst"``, and the pool reports its synchronous puts/spills through
+``record_pair`` — together the measured bandwidth table ``recalibrate()``
+turns into a ``CalibratedHardwareSpec``.
 """
 
 from __future__ import annotations
@@ -72,6 +82,20 @@ class TransferStats:
     backpressure_waits: int = 0  # submits stalled by a full pipeline
     backpressure_s: float = 0.0  # time submit() spent retiring transfers
     max_in_flight: int = 0
+    #: measured per tier-pair movement, keyed "src->dst": each entry holds
+    #: {transfers, bytes, busy_s} where busy_s is summed per-transfer
+    #: execution time (NOT wall time — concurrent transfers double-count,
+    #: so bytes/busy_s is per-stream bandwidth, the number a planner's
+    #: transfer_time() estimate should match)
+    pairs: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    def record_pair(self, src: str, dst: str, nbytes: int,
+                    seconds: float) -> None:
+        b = self.pairs.setdefault(f"{src}->{dst}",
+                                  {"transfers": 0, "bytes": 0, "busy_s": 0.0})
+        b["transfers"] += 1
+        b["bytes"] += int(nbytes)
+        b["busy_s"] += float(seconds)
 
     def snapshot(self) -> Dict[str, float]:
         return {
@@ -82,6 +106,7 @@ class TransferStats:
             "backpressure_waits": self.backpressure_waits,
             "backpressure_s": self.backpressure_s,
             "max_in_flight": self.max_in_flight,
+            "pairs": {k: dict(v) for k, v in self.pairs.items()},
         }
 
 
@@ -128,8 +153,11 @@ class TransferEngine:
                  tracer=None) -> None:
         if depth < 1:
             raise ValueError("depth must be >= 1")
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
         self.depth = depth
         self.depth_pinned = False   # True ⇒ ensure_depth is a no-op
+        self.workers = workers
         self._pool = ThreadPoolExecutor(max_workers=workers,
                                         thread_name_prefix="pool-xfer")
         self._in_flight: Deque[TransferHandle] = deque()
@@ -154,17 +182,46 @@ class TransferEngine:
             if not self.depth_pinned:
                 self.depth = max(self.depth, int(depth))
 
+    def ensure_workers(self, workers: int) -> None:
+        """Raise the worker-thread count to at least ``workers`` (never
+        lowers). This is the knob the calibration loop turns: on a
+        latency-dominated tier, sustained throughput needs in-flight
+        parallelism up to the measured bandwidth-delay product, and worker
+        threads are what bound genuine concurrency (depth only bounds
+        queued submissions). Drains outstanding transfers, then swaps the
+        executor — safe at a step boundary, where every consumer has
+        already waited."""
+        workers = int(workers)
+        if workers <= self.workers:
+            return
+        self.drain()
+        old = self._pool
+        self._pool = ThreadPoolExecutor(max_workers=workers,
+                                        thread_name_prefix="pool-xfer")
+        self.workers = workers
+        old.shutdown(wait=True)
+
+    def record_pair(self, src: str, dst: str, nbytes: int,
+                    seconds: float) -> None:
+        """Record one synchronous transfer into the per-pair table (the
+        pool's blocking puts and spills — movement that never goes through
+        ``submit`` but that calibration still needs to see)."""
+        with self._lock:
+            self.stats.record_pair(src, dst, nbytes, seconds)
+
     # ------------------------------------------------------------------
     def submit(self, fn: Callable[[], Any], key: Optional[str] = None, *,
                src: Optional[str] = None,
-               dst: Optional[str] = None) -> TransferHandle:
+               dst: Optional[str] = None,
+               nbytes: Optional[int] = None) -> TransferHandle:
         """Issue ``fn`` (a transfer thunk) asynchronously. Blocks on the
         oldest outstanding transfer first when the pipeline is full —
         charged to backpressure stats, not consumer-exposed time (the
         consumer's own later wait() on that handle still counts normally).
         Thread-safe: concurrent submitters share the depth bound.
-        ``src``/``dst`` name the tiers the bytes move between — trace
-        metadata only (the overlap analyzer's per-tier-pair breakdown)."""
+        ``src``/``dst`` name the tiers the bytes move between; with
+        ``nbytes`` they additionally record the transfer's measured
+        execution time into the per-pair calibration table."""
         while True:
             with self._lock:
                 self._reap_locked()
@@ -172,19 +229,22 @@ class TransferEngine:
                     self._seq += 1
                     seq = self._seq
                     self.stats.issued += 1
-                    t_issue = time.perf_counter()
 
                     def run():
+                        t_start = time.perf_counter()
                         try:
                             return fn()
                         finally:
                             t_done = time.perf_counter()
                             with self._lock:
                                 self.stats.completed += 1
+                                if src and dst and nbytes is not None:
+                                    self.stats.record_pair(
+                                        src, dst, nbytes, t_done - t_start)
                             if self.tracer.enabled:
                                 self.tracer.complete(
-                                    "transfer", "transfer", t_issue,
-                                    t_done - t_issue,
+                                    "transfer", "transfer", t_start,
+                                    t_done - t_start,
                                     {"seq": seq, "key": key,
                                      "src": src, "dst": dst})
 

@@ -232,7 +232,7 @@ class PrefixCacheManager:
             try:
                 for label, value in extract(node.depth - 1).items():
                     key = f"{self._ns}/n{node.node_id}/{label}"
-                    self.pool.put(key, value, DEVICE_TIER,
+                    self.pool.put(key, value, self.pool.top_tier,
                                   priority=PREFIX_PAGE_PRIORITY)
                     node.entries[label] = key
                     self._owner[key] = node

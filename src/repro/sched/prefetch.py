@@ -68,6 +68,12 @@ class PrefetchStats:
             return 0.0
         return sum(self.plan_leads.values()) / len(self.plan_leads)
 
+    @property
+    def mean_fetches_per_step(self) -> float:
+        """Observed per-step fetch fan-out — the ``pages_per_step`` input
+        to the calibration loop's in-flight sizing."""
+        return self.fetches_issued / self.steps if self.steps else 0.0
+
     def snapshot(self) -> Dict[str, float]:
         return {"steps": self.steps, "fetches_issued": self.fetches_issued,
                 "layers_planned": len(self.plan_leads),
@@ -88,7 +94,11 @@ class PlanPrefetcher:
         # of every pool-resident KV tensor must be planned even for
         # smoke-scale models)
         opts = insert_opts if insert_opts is not None else PAGED_INSERTION
-        key = ("decode_plan", cfg.name, batch, max_seq, refine, hw.name, opts)
+        # the pool's tier topology joins the key: plans computed under
+        # different hierarchies (or a calibrated vs static hw, via hw.name)
+        # must never alias
+        key = ("decode_plan", cfg.name, batch, max_seq, refine, hw.name, opts,
+               getattr(pool, "topology", None))
         if plan_cache is not None and key in plan_cache:
             self.plan = plan_cache[key]
         else:

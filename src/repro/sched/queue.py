@@ -1,12 +1,13 @@
 """Arrival queue and pool-capacity-aware admission control.
 
 Admission follows the SLO-offloading systems the ISSUE cites (Select-N,
-Harvest): a request joins the running batch only if the pool's **device
-tier + host tier** can hold its worst-case KV pages *on top of* current
-occupancy and every already-admitted request's standing reservation
-(``MemoryPoolManager.reserve``). Otherwise it stays QUEUED — the scheduler
-never over-commits, so page parks can always be honored without touching
-the (slow) remote tier.
+Harvest): a request joins the running batch only if the pool's
+**admitting tiers** (declared per-``TierSpec`` in the topology; device +
+host in the default chain) can hold its worst-case KV pages *on top of*
+current occupancy and every already-admitted request's standing
+reservation (``MemoryPoolManager.reserve``). Otherwise it stays QUEUED —
+the scheduler never over-commits, so page parks can always be honored
+without touching the slow non-admitting tiers.
 """
 
 from __future__ import annotations
@@ -21,6 +22,9 @@ from repro.pool.manager import MemoryPoolManager
 from repro.sched.requests import Request, RequestState
 from repro.slo.policy import SLOSpec
 
+#: the default chain's admitting tiers — kept for callers that pin the
+#: historical pair explicitly; ``AdmissionController`` now defaults to the
+#: pool topology's own ``admit`` declarations
 ADMISSION_TIERS = (DEVICE_TIER, HOST_TIER)
 
 
@@ -92,9 +96,10 @@ class AdmissionController:
     benchmark's queueing-pressure signal)."""
 
     def __init__(self, pool: MemoryPoolManager,
-                 tiers: Sequence[str] = ADMISSION_TIERS) -> None:
+                 tiers: Optional[Sequence[str]] = None) -> None:
         self.pool = pool
-        self.tiers = tuple(tiers)
+        self.tiers = (tuple(tiers) if tiers is not None
+                      else pool.admission_tiers)
         self.blocked = 0
 
     def try_admit(self, state: RequestState, nbytes: int,

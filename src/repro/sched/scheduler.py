@@ -60,9 +60,7 @@ from repro.models.model import Model
 from repro.obs.metrics import STEP_BUCKETS, MetricsRegistry
 from repro.obs.trace import NULL_TRACER
 from repro.offload.kvcache import KVPageTable, worst_case_page_bytes
-from repro.pool import (
-    DEVICE_TIER, MemoryPoolManager, auto_depth, default_pool,
-)
+from repro.pool import MemoryPoolManager, auto_depth, default_pool
 from repro.pool.manager import PoolEntry
 from repro.prefix import PrefixCacheManager
 from repro.sched.prefetch import InFlightFetches, PlanPrefetcher
@@ -209,6 +207,7 @@ class ContinuousScheduler:
             # shared (session) pool: grow the engine to cover this consumer
             pool.transfer.ensure_depth(auto_depth(pages=pages))
         self.pool = pool
+        self._plan_cache = plan_cache
         self.queue = ArrivalQueue()
         self.admission = AdmissionController(self.pool)
         self._row_bytes = worst_case_page_bytes(
@@ -720,8 +719,8 @@ class ContinuousScheduler:
             for i, (si, ri, pi) in enumerate(self._flat):
                 leaves = jax.tree.leaves(row["segments"][si][f"p{pi}"])
                 for j, leaf in enumerate(leaves):
-                    state.pages.park(f"L{i}.{j}", leaf[ri, 0], DEVICE_TIER,
-                                     priority=prio)
+                    state.pages.park(f"L{i}.{j}", leaf[ri, 0],
+                                     self.pool.top_tier, priority=prio)
                     self.stats.pages_parked += 1
         state.chunk_cache = None
 
@@ -925,7 +924,7 @@ class ContinuousScheduler:
                 leaves = jax.tree.leaves(self._subtree(si, pi))
                 for j, leaf in enumerate(leaves):
                     key = s.pages.park(f"L{i}.{j}", leaf[ri, s.slot],
-                                       DEVICE_TIER, priority=prio)
+                                       self.pool.top_tier, priority=prio)
                     keys_by_layer.setdefault(i, []).append(key)
                     self._fetch_map[key] = (si, pi, j, ri, s.slot)
                     self.stats.pages_parked += 1
@@ -933,6 +932,27 @@ class ContinuousScheduler:
             self._inflight = self.prefetcher.issue(keys_by_layer)
 
     # ------------------------------------------------------------------
+    def replan(self, hw) -> None:
+        """Swap in a prefetch plan computed under ``hw`` — the session's
+        calibration loop calls this after measuring real per-tier transfer
+        rates, so the refined issue order and plan leads reflect measured
+        bandwidth rather than the static spec the scheduler was built
+        with. No-op in resident mode (nothing is planned). Safe at a step
+        boundary: parked pages keep their keys; only the *order* future
+        fetches issue in (and the plan cached under the new spec's name)
+        changes. Counters carry over so per-step rates stay meaningful."""
+        self.cfg = dataclasses.replace(self.cfg, hw=hw)
+        if self.prefetcher is None:
+            return
+        old_stats = self.prefetcher.stats
+        self.prefetcher = PlanPrefetcher(
+            self.model.cfg, self.cfg.max_batch, self.cfg.max_seq,
+            pool=self.pool, hw=hw, refine=self.cfg.refine,
+            insert_opts=self.cfg.insert_opts, plan_cache=self._plan_cache,
+            tracer=self._tracer)
+        self.prefetcher.stats.steps = old_stats.steps
+        self.prefetcher.stats.fetches_issued = old_stats.fetches_issued
+
     def step(self) -> List[Tuple[int, int]]:
         """One scheduler step. Returns the (req_id, token) pairs emitted.
 

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.models.model import Model
 from repro.obs import NULL_TRACER
-from repro.pool import HOST_TIER, MemoryPoolManager, auto_depth
+from repro.pool import MemoryPoolManager, auto_depth
 from repro.serving.sampling import sample_token
 
 
@@ -128,7 +128,7 @@ class ServeEngine:
                 self._kv_keys.append(f"{self._key_ns}/kv{len(self._kv_keys)}")
             keys = self._kv_keys[:len(leaves)]
             for k, leaf in zip(keys, leaves):
-                self.pool.put(k, leaf, HOST_TIER)
+                self.pool.put(k, leaf)   # topology's default store tier
             handles = [self.pool.prefetch(k) for k in keys]
             self.stats.cache_round_trips += 1
             fetched = [h.wait() for h in handles]

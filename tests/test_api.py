@@ -13,13 +13,17 @@ import pytest
 import repro.api
 from repro.api import HyperOffloadSession, OffloadConfig
 from repro.api.__main__ import main as api_main
+from repro.api.config import CalibrationConfig, PrefixCacheConfig
 from repro.configs import REGISTRY
+from repro.core.calibration import (
+    CalibratedHardwareSpec, measurements_from_pairs,
+)
 from repro.core.costmodel import HardwareSpec
 from repro.core.insertion import PAGED_INSERTION, InsertionOptions
 from repro.core.schedule import ScheduleOptions
 from repro.models.model import build_model
 from repro.offload.kvcache import PagedKVCache
-from repro.pool import auto_depth
+from repro.pool import TierSpec, TierTopology, auto_depth
 from repro.sched import ContinuousScheduler, Request, SchedulerConfig
 from repro.serving.engine import ServeEngine
 
@@ -139,8 +143,45 @@ def test_print_config_cli(capsys):
     assert dumped["transfer_depth"] == "auto"
     # the dump is the default config, exactly (drift detector for CI)
     resolved = dumped.pop("insertion_resolved")
+    topo = dumped.pop("topology_resolved")
     assert OffloadConfig.from_dict(dumped) == OffloadConfig()
     assert resolved["min_bytes"] == OffloadConfig().insertion_options().min_bytes
+    assert [t["name"] for t in topo["tiers"]] == ["device", "host", "remote"]
+
+
+def test_config_topology_roundtrip_and_validation():
+    topo = TierTopology(tiers=(
+        TierSpec("device", kind="device", capacity=1 << 20),
+        TierSpec("host", kind="host", capacity=1 << 22),
+        TierSpec("cxl", kind="modeled", read_bw=5e9, write_bw=4e9,
+                 read_latency_s=1e-4, admit=False),
+    ))
+    cfg = OffloadConfig(mode="kv_offload", topology=topo,
+                        calibration=CalibrationConfig(min_transfers=4,
+                                                      max_inflight=32))
+    wire = json.loads(json.dumps(cfg.to_dict()))
+    back = OffloadConfig.from_dict(wire)
+    assert back == cfg and back.tier_topology == topo
+    # no explicit topology: the default chain built from capacity fields
+    d = OffloadConfig(host_capacity=1 << 20)
+    assert d.tier_topology.names == ("device", "host", "remote")
+    assert d.tier_topology.spec("host").capacity == 1 << 20
+    with pytest.raises(ValueError, match="TierTopology"):
+        OffloadConfig(topology={"tiers": []})        # dict, not the type
+    with pytest.raises(ValueError, match="capacities"):
+        OffloadConfig(topology=topo, host_capacity=1 << 20)
+    with pytest.raises(ValueError, match="pin_tier"):
+        OffloadConfig(mode="continuous", chunk_size=8, topology=topo,
+                      prefix_cache=PrefixCacheConfig(enable=True,
+                                                     pin_tier="remote"))
+    # a disabled prefix cache never vetoes a custom chain (its default
+    # pin names the legacy "host" tier)
+    OffloadConfig(topology=TierTopology(tiers=(TierSpec("ram",
+                                                        kind="numpy"),)))
+    with pytest.raises(ValueError, match="min_transfers"):
+        CalibrationConfig(min_transfers=0)
+    with pytest.raises(ValueError, match="max_inflight"):
+        CalibrationConfig(max_inflight=0)
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +277,69 @@ def test_session_scheduler_overrides(model_and_params):
         with pytest.raises(TypeError, match="not both"):
             session.init_train_state(model, jax.random.key(0),
                                      ts=session.train_config(), total_steps=5)
+
+
+def test_default_topology_is_behaviorally_identical(model_and_params):
+    """ISSUE acceptance: an explicit `TierTopology.default()` serves
+    token-identically to the legacy (topology=None) config in both
+    resident and kv_offload modes, with the same stats() surface."""
+    model, params = model_and_params
+    batch = {"tokens": jnp.ones((2, 4), jnp.int32)}
+    for mode in ("resident", "kv_offload"):
+        outs, shapes = [], []
+        for topo in (None, TierTopology.default()):
+            cfg = OffloadConfig(mode=mode, max_batch=2, max_seq=MAX_SEQ,
+                                topology=topo)
+            with HyperOffloadSession(cfg) as s:
+                out = s.serve_engine(model, params).generate(batch, 6)
+                outs.append(np.asarray(out))
+                st = s.stats()
+                shapes.append((sorted(st), sorted(st["pool"])))
+        np.testing.assert_array_equal(outs[0], outs[1])
+        assert shapes[0] == shapes[1]
+
+
+def test_recalibrate_replans_from_measured_bandwidth(model_and_params):
+    """ISSUE acceptance: recalibrate() yields a spec whose transfer
+    numbers are the byte-weighted measured per-tier-pair bandwidths (not
+    the static HardwareSpec's), and swaps it into the planner and every
+    live scheduler."""
+    model, params = model_and_params
+    cfg = OffloadConfig(mode="kv_offload", max_batch=2, max_seq=MAX_SEQ)
+    with HyperOffloadSession(cfg) as s:
+        sched = s.scheduler(model, params)
+        sched.run([Request(tokens=np.ones((6,), np.int32),
+                           max_new_tokens=4, seed=0)])
+        # the serve engine's cache round trips produce the host->device
+        # read traffic calibration feeds on
+        s.serve_engine(model, params).generate(
+            {"tokens": jnp.ones((2, 4), jnp.int32)}, 4)
+        static = s.hw
+        pairs = s.transfer.stats.snapshot()["pairs"]
+        ms = measurements_from_pairs(pairs)
+        spec = s.recalibrate()
+        assert isinstance(spec, CalibratedHardwareSpec)
+        assert spec.name == f"{static.name}+measured"
+        # the scalar the cost model consumes is the measured byte-weighted
+        # read bandwidth into the device tier, exactly
+        reads = [m for (src, dst), m in ms.items()
+                 if dst == "device" and src != "device"
+                 and m.transfers >= 2 and m.nbytes >= 1024]
+        assert reads, "serving must have produced eligible read traffic"
+        expect = (sum(m.nbytes for m in reads)
+                  / sum(m.busy_s for m in reads))
+        assert spec.pool_bw_r2d == pytest.approx(expect)
+        assert spec.pool_bw_r2d != static.pool_bw_r2d
+        # the per-pair table carries each measured link
+        for m in reads:
+            assert spec.bandwidth_between(m.src, m.dst) == pytest.approx(
+                m.bandwidth)
+        # planner and scheduler both run on the measured spec now
+        assert s.planner.hw is spec
+        assert sched.cfg.hw is spec
+        assert sched.prefetcher is not None
+        # calibrating again never stacks name suffixes
+        assert s.recalibrate().name == f"{static.name}+measured"
 
 
 # ---------------------------------------------------------------------------

@@ -126,17 +126,31 @@ def test_checker_rejects_corrupt_traces():
     assert any("no complete spans" in e for e in validate_events(empty))
 
 
-def test_checker_rejects_wait_before_issue():
+def test_checker_wait_ordering():
     def span(name, ts, dur, args):
         return {"name": name, "cat": "transfer", "ph": "X", "ts": ts,
                 "dur": dur, "pid": 1, "tid": 0, "args": args}
+    # a wait must never resolve before its transfer completes
     obj = {"traceEvents": [
         span("transfer", 1000.0, 500.0, {"seq": 1}),
         span("transfer.wait", 100.0, 50.0, {"seq": 1, "hit": False}),
     ]}
     errs = validate_events(obj)
-    assert any("before its transfer was issued" in e for e in errs)
     assert any("before its transfer completed" in e for e in errs)
+    # an overlapped (hit) wait must start after the transfer completed
+    obj = {"traceEvents": [
+        span("transfer", 1000.0, 500.0, {"seq": 1}),
+        span("transfer.wait", 1200.0, 400.0, {"seq": 1, "hit": True}),
+    ]}
+    errs = validate_events(obj)
+    assert any("before the transfer completed" in e for e in errs)
+    # a BLOCKED wait starting before the transfer span is legal: the span
+    # covers execution only, so queue time puts wait-start ahead of it
+    obj = {"traceEvents": [
+        span("transfer", 1000.0, 500.0, {"seq": 1}),
+        span("transfer.wait", 100.0, 1400.0, {"seq": 1, "hit": False}),
+    ]}
+    assert validate_events(obj) == []
 
 
 def test_checker_validate_file_unreadable(tmp_path):

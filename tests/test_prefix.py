@@ -364,8 +364,14 @@ def test_prefix_config_validation_and_roundtrip():
     with pytest.raises(ValueError, match="scheduler mode"):
         OffloadConfig(mode="resident", chunk_size=6,
                       prefix_cache=PrefixCacheConfig(enable=True))
+    # tier names are declarative (the topology's), so pin_tier validates
+    # at the OffloadConfig level against the effective chain — but only
+    # when the cache is actually enabled
     with pytest.raises(ValueError, match="pin_tier"):
-        PrefixCacheConfig(pin_tier="nvram")
+        OffloadConfig(mode="continuous", chunk_size=8,
+                      prefix_cache=PrefixCacheConfig(enable=True,
+                                                     pin_tier="nvram"))
+    OffloadConfig(prefix_cache=PrefixCacheConfig(pin_tier="nvram"))
     with pytest.raises(ValueError, match="page_size"):
         PrefixCacheConfig(page_size=0)
 
