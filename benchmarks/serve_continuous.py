@@ -471,6 +471,104 @@ def run_overload_comparison(model, params, *, requests: int, vocab_size: int,
 
 
 # ---------------------------------------------------------------------------
+# paged decode: fused kernel vs legacy gather, KV codec wire traffic
+# ---------------------------------------------------------------------------
+
+
+def run_decode_kernel(*, steps: int, seed: int) -> Dict[str, object]:
+    """The decode hot loop in isolation: one long prefilled context, then
+    ``steps`` attention-only decode steps per arm.
+
+    - **gather** — the seed path: every step fetches each pool page and
+      ``jnp.concatenate``\\ s before attending.
+    - **fused**  — ``attend_fused``: pages install once into the device
+      page buffer, the page table indexes them in place (exact-math jnp
+      ref; the Pallas kernel's error is reported alongside).
+
+    A second pair of runs restricts the device buffer (``device_pages``)
+    so every step's top-k selection pulls pool traffic, measuring on-wire
+    bytes per fetch with the codec off vs int8."""
+    from repro.offload.kvcache import PagedKVCache
+    from repro.pool import default_pool
+
+    b, hq, hkv, d, page, npages, tail = 2, 8, 2, 64, 16, 24, 8
+    s0 = npages * page + tail
+    ks = jax.random.split(jax.random.key(seed), 2 + steps)
+    k_seq = jax.random.normal(ks[0], (b, s0, hkv, d))
+    v_seq = jax.random.normal(ks[1], (b, s0, hkv, d))
+    qs = [jax.random.normal(ks[2 + t], (b, hq, d)) for t in range(steps)]
+    scale = d ** -0.5
+
+    def build(codec=None, device_pages=None):
+        pool = default_pool(codec=codec, codec_below="host")
+        cache = PagedKVCache.create(batch=b, max_seq=s0 + page,
+                                    page_size=page, n_kv_heads=hkv,
+                                    head_dim=d, pool=pool,
+                                    device_pages=device_pages)
+        cache.prefill(k_seq, v_seq)
+        return cache
+
+    def timed(cache, attend):
+        attend(qs[0])                       # warm the jit outside the clock
+        t0 = time.perf_counter()
+        outs = [attend(q) for q in qs]
+        jax.block_until_ready(outs[-1])
+        return outs, time.perf_counter() - t0
+
+    cache = build()
+    outs_g, wall_g = timed(
+        cache, lambda q: cache.attend(q, scale=scale, top_k_pages=None))
+    gather_fetches = cache.fetches
+    cache.pool.close()
+
+    cache = build()
+    outs_f, wall_f = timed(
+        cache, lambda q: cache.attend_fused(q, scale=scale))
+    kernel_out = cache.attend_fused(qs[0], scale=scale, use_kernel=True)
+    kernel_err = float(jnp.max(jnp.abs(kernel_out - outs_f[0])))
+    buffer_hits, buffer_misses = cache.buffer_hits, cache.buffer_misses
+    cache.pool.close()
+
+    # token identity: bitwise-equal attention outputs feed bitwise-equal
+    # logits, so greedy decoding emits the same tokens
+    match = all(bool(jnp.all(f == g)) for f, g in zip(outs_f, outs_g))
+
+    def traffic(codec):
+        cache = build(codec=codec, device_pages=4)
+        for q in qs:
+            cache.attend_fused(q, scale=scale, top_k_pages=4)
+        stats = cache.pool_stats()
+        per_fetch = stats["bytes_fetched"] / max(cache.fetches, 1)
+        cache.pool.close()
+        return per_fetch
+
+    bpf_none, bpf_int8 = traffic(None), traffic("int8")
+
+    # quantization error of the full-context int8 page pool vs exact
+    cache = build(codec="int8")
+    int8_err = float(jnp.max(jnp.abs(
+        cache.attend_fused(qs[0], scale=scale) - outs_g[0])))
+    cache.pool.close()
+
+    tokens = steps * b
+    return {
+        "batch": b, "steps": steps, "context": s0, "pages": npages,
+        "gather": {"tokens_per_s": tokens / wall_g, "wall_s": wall_g,
+                   "pool_fetches": gather_fetches},
+        "fused": {"tokens_per_s": tokens / wall_f, "wall_s": wall_f,
+                  "buffer_hits": buffer_hits,
+                  "buffer_misses": buffer_misses},
+        "decode_speedup": wall_g / wall_f,
+        "tokens_match_gather": match,
+        "kernel_max_abs_err": kernel_err,
+        "codec": {"bytes_per_fetch_none": bpf_none,
+                  "bytes_per_fetch_int8": bpf_int8,
+                  "byte_reduction": bpf_none / bpf_int8,
+                  "int8_max_abs_err": int8_err},
+    }
+
+
+# ---------------------------------------------------------------------------
 
 
 def main() -> None:
@@ -576,6 +674,10 @@ def main() -> None:
         vocab_size=cfg.vocab_size, max_batch=args.max_batch,
         max_seq=args.max_seq, seed=args.seed + 10)
 
+    # fused paged-decode kernel vs gather/concat + KV codec wire bytes
+    decode_kernel = run_decode_kernel(steps=8 if args.smoke else 32,
+                                      seed=args.seed + 12)
+
     # SLO-aware scheduling vs FIFO at 2-5x overload
     overload = run_overload_comparison(
         model, params, requests=args.requests, vocab_size=cfg.vocab_size,
@@ -589,6 +691,7 @@ def main() -> None:
         "static": static, "continuous": cont, "kv_offload": offload,
         "long_prompts": long_prompts, "prefix_cache": prefix_cache,
         "calibration": calibration, "overload": overload,
+        "decode_kernel": decode_kernel,
         # the merged front-door snapshot: pool/transfer counters next to
         # the throughput numbers (tracked in BENCH_serving.json)
         "session": off_session.stats(),
@@ -641,6 +744,14 @@ def main() -> None:
               f"workers:{c['workers']},"
               f"hidden_fraction:"
               f"{'n/a' if hf is None else format(hf, '.2f')}")
+    dk = decode_kernel
+    print(f"serve_continuous,decode_kernel,"
+          f"gather_tok/s:{dk['gather']['tokens_per_s']:.1f},"
+          f"fused_tok/s:{dk['fused']['tokens_per_s']:.1f},"
+          f"speedup:{dk['decode_speedup']:.2f},"
+          f"match:{dk['tokens_match_gather']},"
+          f"kernel_err:{dk['kernel_max_abs_err']:.1e},"
+          f"byte_reduction:{dk['codec']['byte_reduction']:.2f}")
     for factor in ("2x", "3x", "5x"):
         fo, so = overload[factor]["fifo"], overload[factor]["slo"]
         f_tta = fo["attainment"]["classes"]["interactive"]["ttft_attainment"]

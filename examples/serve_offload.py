@@ -97,6 +97,17 @@ def main(trace_out=None):
               f"pages, err vs dense {err:.3e}, {dt * 1e3:.1f} ms")
     print(f"all pages: err {err_all:.3e} (exact), {t_all * 1e3:.1f} ms")
 
+    # fused paged decode: pages install once into the device page buffer,
+    # the page table indexes them in place — no per-step gather/concat
+    out_f = cache.attend_fused(q, scale=scale)     # warm: installs pages
+    t0 = time.time()
+    out_f = cache.attend_fused(q, scale=scale)
+    jax.block_until_ready(out_f)
+    t_fused = time.time() - t0
+    print(f"fused decode: bitwise match {bool(jnp.all(out_f == out_all))}, "
+          f"{t_fused * 1e3:.1f} ms ({cache.buffer_hits} buffer hits / "
+          f"{cache.buffer_misses} installs)")
+
     # decode loop with async prefetch: select on the post-append state (so a
     # page flushed this step is a candidate), issue all page fetches at once
     # through the transfer engine, and wait only inside attend — the fetches

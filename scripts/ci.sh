@@ -54,6 +54,23 @@ print(f"ci,calibration,hidden_fraction:{hs:.2f}->{hc:.2f},"
       f"workers:{cal['static']['workers']}->{cal['calibrated']['workers']}")
 EOF
 
+# decode-kernel gate: the fused paged-decode path must beat the legacy
+# per-step gather/concat on decode tok/s with token-identical output
+# (codec "none"), and int8 KV pages must at least halve the on-wire
+# bytes per pool fetch — the PR's two headline claims as hard asserts
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import json
+dk = json.load(open("BENCH_serving.json"))["decode_kernel"]
+g = dk["gather"]["tokens_per_s"]
+f = dk["fused"]["tokens_per_s"]
+assert f > g, f"fused decode {f:.1f} tok/s <= gather {g:.1f}"
+assert dk["tokens_match_gather"], "fused decode diverged from gather output"
+br = dk["codec"]["byte_reduction"]
+assert br >= 2.0, f"int8 pages cut wire bytes only {br:.2f}x (< 2x)"
+print(f"ci,decode_kernel,tok/s:{g:.1f}->{f:.1f},"
+      f"speedup:{dk['decode_speedup']:.2f},byte_reduction:{br:.2f}")
+EOF
+
 # SLO gate: at 3x overload the SLO-aware scheduler must beat FIFO on
 # goodput (deadline-met tokens per virtual step) AND on interactive TTFT
 # attainment — both on the deterministic virtual clock, so this is a

@@ -25,10 +25,11 @@ remat=..., offload_opt_state=...))``   total_steps=...)``
 =====================================  =====================================
 """
 
-from repro.api.config import HW_SPECS, MODES, OffloadConfig
+from repro.api.config import HW_SPECS, KVCodecConfig, MODES, OffloadConfig
 from repro.api.session import HyperOffloadSession
 
 __all__ = [
+    "KVCodecConfig",
     "OffloadConfig",
     "HyperOffloadSession",
     "HW_SPECS",

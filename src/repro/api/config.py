@@ -91,6 +91,36 @@ class PrefixCacheConfig:
 
 
 @dataclass(frozen=True)
+class KVCodecConfig:
+    """Quantized KV page codec (``repro.pool.codec``): off by default
+    (``codec="none"`` — pages move full precision, bit-identical serving).
+    Enabling wraps every pool tier from ``below_tier`` down to the bottom
+    of the chain in a ``CodecBackend``: pages quantize once on arrival
+    below the boundary (per-page absmax scale stored alongside), every
+    transfer across those links moves the 2–4× smaller payload, and
+    admission counts the wrapped tiers at decoded-equivalent capacity.
+    ``below_tier`` is validated against the session's tier topology by
+    ``OffloadConfig`` (the chain's names are declarative, so this block
+    alone can't know them)."""
+
+    codec: str = "none"            # "none" | "int8" | "fp8"
+    below_tier: str = "host"       # first (topmost) codec-wrapped tier
+
+    def __post_init__(self) -> None:
+        # late import: pool.codec pulls in jax; config stays light
+        from repro.pool.codec import CODECS
+        if self.codec not in CODECS:
+            raise ValueError(
+                f"kv_codec.codec {self.codec!r} not in {CODECS}")
+        if not self.below_tier or not isinstance(self.below_tier, str):
+            raise ValueError("kv_codec.below_tier must be a tier name")
+
+    @property
+    def enabled(self) -> bool:
+        return self.codec != "none"
+
+
+@dataclass(frozen=True)
 class CalibrationConfig:
     """Closed-loop calibration knobs (``core.calibration``), applied by
     ``HyperOffloadSession.recalibrate()``: eligibility thresholds before a
@@ -181,6 +211,8 @@ class OffloadConfig:
     cache_dtype: str = "float32"
     # cross-request prefix cache (scheduler modes with chunked prefill)
     prefix_cache: PrefixCacheConfig = field(default_factory=PrefixCacheConfig)
+    # quantized KV page codec below a tier boundary (repro.pool.codec)
+    kv_codec: KVCodecConfig = field(default_factory=KVCodecConfig)
     # unified telemetry (repro.obs): tracing + metrics, off by default
     telemetry: TelemetryConfig = field(default_factory=TelemetryConfig)
     # SLO-aware scheduling (repro.slo): priority classes, deadline-driven
@@ -258,6 +290,22 @@ class OffloadConfig:
                 raise ValueError(
                     f"prefix_cache.pin_tier {self.prefix_cache.pin_tier!r} "
                     f"not a tier of the topology {names}")
+        # same deal for the codec boundary: only an enabled codec must
+        # name a real, off-accelerator tier of the effective chain
+        if self.kv_codec.enabled:
+            topo = self.tier_topology
+            if self.kv_codec.below_tier not in topo.names:
+                raise ValueError(
+                    f"kv_codec.below_tier {self.kv_codec.below_tier!r} "
+                    f"not a tier of the topology {topo.names}")
+            spec = next(t for t in topo.tiers
+                        if t.name == self.kv_codec.below_tier)
+            if spec.kind == "device":
+                raise ValueError(
+                    f"kv_codec.below_tier {self.kv_codec.below_tier!r} is "
+                    "an accelerator tier; the compute path needs "
+                    "full-precision pages on device — pick an "
+                    "off-accelerator tier")
 
     # ------------------------------------------------------------------
     @property
@@ -336,6 +384,9 @@ class OffloadConfig:
         if isinstance(kwargs.get("prefix_cache"), dict):
             kwargs["prefix_cache"] = _options_from(PrefixCacheConfig,
                                                    kwargs["prefix_cache"])
+        if isinstance(kwargs.get("kv_codec"), dict):
+            kwargs["kv_codec"] = _options_from(KVCodecConfig,
+                                               kwargs["kv_codec"])
         if isinstance(kwargs.get("telemetry"), dict):
             kwargs["telemetry"] = _options_from(TelemetryConfig,
                                                 kwargs["telemetry"])

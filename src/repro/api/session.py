@@ -97,6 +97,8 @@ class HyperOffloadSession:
                 device=device,
                 transfer_depth=c.depth_for(),
                 transfer_workers=c.transfer_workers,
+                codec=c.kv_codec.codec if c.kv_codec.enabled else None,
+                codec_below=c.kv_codec.below_tier,
                 tracer=self.tracer if c.telemetry.enable else None)
         elif c.telemetry.enable:
             pool.set_tracer(self.tracer)
@@ -339,17 +341,22 @@ class HyperOffloadSession:
     def paged_kv(self, *, batch: int, n_kv_heads: int, head_dim: int,
                  max_seq: Optional[int] = None,
                  page_size: Optional[int] = None,
-                 dtype=None) -> PagedKVCache:
+                 dtype=None,
+                 device_pages: Optional[int] = None,
+                 use_kernel: bool = False) -> PagedKVCache:
         """A `PagedKVCache` storing its pages in the session pool. (Each
         subsystem declares its own depth need to the shared engine — see
-        `pool.auto_depth`.)"""
+        `pool.auto_depth`.) ``device_pages``/``use_kernel`` size the fused
+        decode path's device page buffer and pick its kernel (see
+        ``PagedKVCache.attend_fused``)."""
         max_seq = self.config.max_seq if max_seq is None else max_seq
         page_size = self.config.page_size if page_size is None else page_size
         cache = PagedKVCache.create(
             batch=batch, max_seq=max_seq, page_size=page_size,
             n_kv_heads=n_kv_heads, head_dim=head_dim,
             dtype=dtype if dtype is not None else self.config.dtype,
-            pool=self.pool)
+            pool=self.pool, device_pages=device_pages,
+            use_kernel=use_kernel)
         self._paged.append(cache)
         return cache
 

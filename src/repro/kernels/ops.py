@@ -14,7 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.paged_attention import decode_attention_pallas
+from repro.kernels.paged_attention import (
+    decode_attention_pallas, paged_decode_attention_pallas,
+)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 # CPU backend executes Pallas in interpret mode only.
@@ -49,6 +51,21 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     out = decode_attention_pallas(q3, kt, vt, pos, scale=scale,
                                   logit_cap=logit_cap, interpret=INTERPRET)
     return out[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "logit_cap"))
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           k_tail: jax.Array, v_tail: jax.Array,
+                           tail_len: jax.Array, *, scale: float,
+                           logit_cap: Optional[float] = None) -> jax.Array:
+    """Paged decode attention over pool pages + device tail: q (B,Hq,D),
+    pages (P,B,page,Hkv,D), table (n,) → (B,Hq,D). Retraces only when the
+    table *length* changes (one flush per page_size tokens) — the slot
+    values ride in as data via scalar prefetch."""
+    return paged_decode_attention_pallas(
+        q, k_pages, v_pages, page_table, k_tail, v_tail, tail_len,
+        scale=scale, logit_cap=logit_cap, interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

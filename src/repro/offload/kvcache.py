@@ -24,16 +24,25 @@ without the cache noticing.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.ref import paged_decode_attention_ref
 from repro.pool import MemoryPoolManager, TransferHandle, auto_depth
 
 NEG_INF = -2.3819763e38
+
+#: jitted exact-math fused attend (the lowering-free serving path);
+#: retraces only when the page-table *length* changes — once per flushed
+#: page — never per step
+_fused_attend_ref = functools.partial(
+    jax.jit, static_argnames=("scale", "logit_cap"))(
+        paged_decode_attention_ref)
 
 # per-instance pool-key namespace, so caches sharing one pool (e.g. one pool
 # across a model's layers) never collide on page keys
@@ -156,17 +165,36 @@ class PagedKVCache:
     flushes: int = 0           # device→pool page stores
     key_ns: str = ""           # pool-key namespace (unique per instance)
 
+    # -- fused-decode device page buffer (attend_fused) ----------------
+    # LRU slot cache of decoded pages on device: the fused path attends
+    # over it in place via a page table, so steady-state decode does ZERO
+    # pool round trips (the gather path does ~2·n_pages per step)
+    device_pages: Optional[int] = None   # slot budget; None → all pages
+    use_kernel: bool = False             # Pallas kernel vs exact jnp ref
+    buffer_hits: int = 0
+    buffer_misses: int = 0
+    _kbuf: Optional[jax.Array] = None    # (n_slots, B, page, Hkv, D)
+    _vbuf: Optional[jax.Array] = None
+    _slot_of: Dict[int, int] = dataclasses.field(default_factory=dict)
+    _slot_page: List[Optional[int]] = dataclasses.field(default_factory=list)
+    _slot_use: List[int] = dataclasses.field(default_factory=list)
+    _use_clock: int = 0
+
     # ------------------------------------------------------------------
     @classmethod
     def create(cls, *, batch: int, max_seq: int, page_size: int,
                n_kv_heads: int, head_dim: int, dtype=jnp.float32,
-               pool: Optional[MemoryPoolManager] = None) -> "PagedKVCache":
+               pool: Optional[MemoryPoolManager] = None,
+               device_pages: Optional[int] = None,
+               use_kernel: bool = False) -> "PagedKVCache":
         n_pages = -(-max_seq // page_size)
         if pool is None:
             raise ValueError(
                 "PagedKVCache.create() requires a pool; construct caches "
                 "through repro.api.HyperOffloadSession.paged_kv "
                 "(mode='paged')")
+        if device_pages is not None and device_pages < 1:
+            raise ValueError("device_pages must be >= 1 (or None = all)")
         pool.transfer.ensure_depth(auto_depth(pages=n_pages))
         return cls(
             page_size=page_size, n_pages=n_pages, batch=batch,
@@ -177,6 +205,7 @@ class PagedKVCache:
             k_tail=jnp.zeros((batch, page_size, n_kv_heads, head_dim), dtype),
             v_tail=jnp.zeros((batch, page_size, n_kv_heads, head_dim), dtype),
             key_ns=f"kvcache{next(_CACHE_IDS)}",
+            device_pages=device_pages, use_kernel=use_kernel,
         )
 
     @property
@@ -205,6 +234,11 @@ class PagedKVCache:
         self.k_pool[page_idx] = kk
         self.v_pool[page_idx] = vk
         self.flushes += 1
+        if self._kbuf is not None:
+            # install at flush: the newest page is the hottest, and taking
+            # it from the tail (not a pool fetch-back) keeps the buffer
+            # exact even when a codec quantizes the pool copy
+            self._install_page(page_idx, k_page, v_page)
 
     def _flush_tail(self) -> None:
         """Store: commit the full tail page to the pool + update summary."""
@@ -296,6 +330,103 @@ class PagedKVCache:
             kp, vp = self.fetch_pages(idx)
         return _paged_attend(q, kp, vp, self.k_tail, self.v_tail,
                              jnp.int32(self.tail_len), scale)
+
+    # -- fused decode over the device page buffer ----------------------
+    @property
+    def n_slots(self) -> int:
+        return self.device_pages if self.device_pages is not None \
+            else self.n_pages
+
+    def _ensure_buffer(self) -> None:
+        if self._kbuf is None:
+            shape = (self.n_slots,) + self._page_shape()
+            self._kbuf = jnp.zeros(shape, self.dtype)
+            self._vbuf = jnp.zeros(shape, self.dtype)
+            self._slot_page = [None] * self.n_slots
+            self._slot_use = [0] * self.n_slots
+
+    def _touch(self, slot: int) -> None:
+        self._use_clock += 1
+        self._slot_use[slot] = self._use_clock
+
+    def _alloc_slot(self, keep: frozenset) -> int:
+        """A free slot, else the LRU slot whose page is not needed this
+        step; its old page stays safe in the pool (the buffer is a cache,
+        never the only copy of a flushed page)."""
+        victims = [s for s in range(self.n_slots)
+                   if self._slot_page[s] is None
+                   or self._slot_page[s] not in keep]
+        if not victims:
+            raise ValueError(
+                f"device_pages={self.n_slots} is smaller than one step's "
+                "page selection; raise the budget or lower top_k_pages")
+        slot = min(victims, key=lambda s: (self._slot_page[s] is not None,
+                                           self._slot_use[s]))
+        old = self._slot_page[slot]
+        if old is not None:
+            del self._slot_of[old]
+        return slot
+
+    def _install_page(self, page_idx: int, k_page: jax.Array,
+                      v_page: jax.Array, keep: frozenset = frozenset()) -> None:
+        slot = self._slot_of.get(page_idx)
+        if slot is None:
+            slot = self._alloc_slot(keep)
+            self._slot_of[page_idx] = slot
+            self._slot_page[slot] = page_idx
+        self._kbuf = self._kbuf.at[slot].set(k_page.astype(self.dtype))
+        self._vbuf = self._vbuf.at[slot].set(v_page.astype(self.dtype))
+        self._touch(slot)
+
+    def _ensure_resident(self, idx: Sequence[int]) -> np.ndarray:
+        """Map the selected page indices onto buffer slots, fetching
+        misses from the pool (decoded). Returns the slot table the fused
+        kernel/ref walks."""
+        self._ensure_buffer()
+        need = frozenset(int(i) for i in idx)
+        slots = []
+        for i in idx:
+            i = int(i)
+            slot = self._slot_of.get(i)
+            if slot is None:
+                self.buffer_misses += 1
+                self.fetches += 1
+                self._install_page(i, self.pool.get(self.k_pool[i]),
+                                   self.pool.get(self.v_pool[i]), keep=need)
+                slot = self._slot_of[i]
+            else:
+                self.buffer_hits += 1
+                self._touch(slot)
+            slots.append(slot)
+        return np.asarray(slots, np.int64)
+
+    def attend_fused(self, q: jax.Array, *, scale: float,
+                     top_k_pages: Optional[int] = None,
+                     use_kernel: Optional[bool] = None) -> jax.Array:
+        """Fused decode attention of q (B, Hq, D) over selected pages +
+        tail — same selection and same merged-softmax semantics as
+        ``attend``, but over the device page buffer via a page table:
+        no per-step gather/concat pool round trip. Steady state (all
+        selected pages resident) touches the pool zero times per step.
+
+        ``use_kernel=False`` (instance default) runs the jitted exact-math
+        reference — bit-identical to ``attend`` for resident pages, which
+        is what makes codec-"none" serving token-identical; ``True`` runs
+        the Pallas online-softmax kernel (parity-tested to 2e-5 in f32,
+        interpret mode on CPU)."""
+        idx = self.select_pages(q, top_k_pages)
+        slots = self._ensure_resident(idx)
+        table = jnp.asarray(slots, jnp.int32)
+        if use_kernel is None:
+            use_kernel = self.use_kernel
+        if use_kernel:
+            from repro.kernels.ops import paged_decode_attention
+            return paged_decode_attention(
+                q, self._kbuf, self._vbuf, table, self.k_tail, self.v_tail,
+                jnp.int32(self.tail_len), scale=scale)
+        return _fused_attend_ref(q, self._kbuf, self._vbuf, table,
+                                 self.k_tail, self.v_tail,
+                                 jnp.int32(self.tail_len), scale=scale)
 
 
 @jax.jit

@@ -6,6 +6,9 @@
 - ``backend``  — tiered memory backends (device HBM / host memory-kind
   shardings / sleep-throttled modeled disaggregated tier) behind one
   interface, with per-device capability probing and graceful fallback;
+- ``codec``    — int8/fp8 KV page codecs (per-page absmax scales); tiers
+  below a configurable boundary store and move encoded payloads, so
+  host/remote transfers carry 2–4× fewer bytes;
 - ``manager``  — capacity-tracked ``MemoryPoolManager`` with
   priority+LRU eviction that spills down the declared tier chain;
 - ``transfer`` — async double-buffered ``TransferEngine`` with explicit
@@ -17,9 +20,13 @@
 
 from repro.pool.backend import (
     DEVICE_TIER, HOST_TIER, REMOTE_TIER,
-    ModeledTierBackend, backend_for, capabilities, device_sharding,
-    host_memory_kind, host_sharding, is_host_resident, make_backend,
-    make_host_backend, to_device, to_host,
+    CodecBackend, ModeledTierBackend, backend_for, capabilities,
+    device_sharding, host_memory_kind, host_sharding, is_host_resident,
+    make_backend, make_host_backend, to_device, to_host,
+)
+from repro.pool.codec import (
+    CODECS, EncodedPage, Fp8Codec, Int8Codec, KVCodec, make_codec,
+    numpy_supports_fp8, roundtrip_bound,
 )
 from repro.pool.topology import TierSpec, TierTopology, sweep_topologies
 from repro.pool.manager import (
@@ -32,6 +39,8 @@ from repro.pool.executor import ExecutionTrace, OffloadPlanExecutor
 
 __all__ = [
     "DEVICE_TIER", "HOST_TIER", "REMOTE_TIER",
+    "CODECS", "CodecBackend", "EncodedPage", "Fp8Codec", "Int8Codec",
+    "KVCodec", "make_codec", "numpy_supports_fp8", "roundtrip_bound",
     "ModeledTierBackend", "backend_for",
     "capabilities", "device_sharding", "host_memory_kind", "host_sharding",
     "is_host_resident", "make_backend", "make_host_backend",

@@ -23,6 +23,7 @@ why the seed's offload runtime failed on CPU backends.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from dataclasses import dataclass
@@ -30,6 +31,8 @@ from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.pool import codec as codec_mod
 
 DEVICE_TIER = "device"
 HOST_TIER = "host"
@@ -150,6 +153,13 @@ class MemoryBackend:
 
     def nbytes(self, handle) -> int:
         return int(handle.nbytes)
+
+    def wire_nbytes(self, value) -> int:
+        """Bytes a ``put(value)`` will move over the wire and occupy at
+        rest in this tier — what capacity accounting and the transfer
+        telemetry must charge. Identity for plain tiers; a codec-wrapped
+        tier reports the *encoded* size."""
+        return int(value.nbytes)
 
     def holds(self, handle) -> bool:
         """Residency check: does the handle live where this tier claims?"""
@@ -287,6 +297,59 @@ class ModeledTierBackend(MemoryBackend):
 
     def holds(self, handle) -> bool:
         return isinstance(handle, np.ndarray)
+
+
+class CodecBackend(MemoryBackend):
+    """A storage tier behind a KV page codec (``pool.codec``): encodes on
+    ``put`` below the configured tier boundary, decodes on ``get``.
+
+    The handle is an ``EncodedPage`` whose payload is stored through the
+    wrapped backend, so the inner tier's character (memory-kind sharding,
+    NumPy buffer, modeled sleep-throttle) applies to the *encoded* bytes —
+    a throttled tier genuinely completes int8 pages ~4× faster, exactly
+    the effect the codec exists to buy. Spilling an ``EncodedPage`` from
+    one codec tier to another with the same codec moves the payload
+    untouched: no decode/re-encode round trip, no compounding of
+    quantization error. ``wire_nbytes``/``nbytes`` report the encoded
+    size, which is what the pool's capacity accounting, the per tier-pair
+    transfer table, and therefore ``core.calibration`` all see."""
+
+    def __init__(self, inner: MemoryBackend, codec) -> None:
+        self.inner = inner
+        self.codec = codec
+        self.name = f"{codec.name}[{inner.name}]"
+
+    def put(self, value) -> "codec_mod.EncodedPage":
+        if isinstance(value, codec_mod.EncodedPage):
+            if value.codec != self.codec.name:
+                raise ValueError(
+                    f"cannot move a {value.codec!r}-encoded page into a "
+                    f"{self.codec.name!r} tier without decoding first")
+            # spill between codec tiers: move the encoded payload only
+            return dataclasses.replace(
+                value, payload=self.inner.put(value.payload))
+        payload, scale = self.codec.encode(value)
+        handle = self.inner.put(payload)
+        return codec_mod.EncodedPage(
+            codec=self.codec.name, payload=handle, scale=scale,
+            dtype=str(value.dtype), shape=tuple(value.shape),
+            nbytes=self.codec.encoded_nbytes(value.shape, value.dtype))
+
+    def get(self, handle) -> jax.Array:
+        payload = self.inner.get(handle.payload)
+        return self.codec.decode(payload, handle.scale, handle.dtype)
+
+    def nbytes(self, handle) -> int:
+        return int(handle.nbytes)
+
+    def wire_nbytes(self, value) -> int:
+        if isinstance(value, codec_mod.EncodedPage):
+            return int(value.nbytes)
+        return self.codec.encoded_nbytes(value.shape, value.dtype)
+
+    def holds(self, handle) -> bool:
+        return (isinstance(handle, codec_mod.EncodedPage)
+                and self.inner.holds(handle.payload))
 
 
 def make_host_backend(device=None) -> MemoryBackend:

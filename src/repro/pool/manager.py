@@ -25,6 +25,7 @@ prefetches.
 
 from __future__ import annotations
 
+import math
 import threading
 import time
 from dataclasses import dataclass, field
@@ -32,6 +33,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.obs.trace import NULL_TRACER
 from repro.pool import backend as B
+from repro.pool import codec as codec_mod
 from repro.pool.topology import TierTopology
 from repro.pool.transfer import TransferEngine, TransferHandle
 
@@ -156,7 +158,13 @@ class MemoryPoolManager:
         t0 = self.tracer.now() if self.tracer.enabled else 0.0
         with self._lock:
             st = self._tier(tier)
-            nbytes = int(value.nbytes)
+            # on-wire size: what this put moves and occupies at rest. For
+            # a codec-wrapped tier this is the *encoded* size — every
+            # byte counter downstream (tier occupancy, bytes_stored, the
+            # per tier-pair calibration table) must see wire bytes, not
+            # the decoded nbytes, or measured bandwidth inflates by the
+            # compression ratio.
+            nbytes = int(st.backend.wire_nbytes(value))
             old = self.entries.pop(key, None)
             if old is not None:
                 self._tier(old.tier).used -= old.nbytes
@@ -258,7 +266,8 @@ class MemoryPoolManager:
     # -- admission control (capacity reservation) ----------------------
     def reserve(self, key: str, nbytes: int,
                 tiers: Optional[Sequence[str]] = None,
-                covers: Optional[str] = None) -> bool:
+                covers: Optional[str] = None,
+                itemsize: Optional[int] = None) -> bool:
         """Reserve ``nbytes`` of worst-case capacity against the combined
         byte budget of ``tiers`` (default: every tier). This is the serving
         scheduler's admission-control ledger: a request is admitted only if
@@ -273,13 +282,21 @@ class MemoryPoolManager:
         running request's parked pages aren't double-counted against new
         admissions.
 
+        ``nbytes`` is always the *decoded* (full-precision) worst case;
+        ``itemsize`` tells the ledger the decoded element size so
+        codec-wrapped tiers are counted at their decoded-equivalent
+        capacity (a tier storing int8 payloads of fp32 pages effectively
+        holds 4× the decoded bytes its raw capacity suggests). Without it
+        the check is raw-byte (historical) and under-admits when a codec
+        is active.
+
         Returns False (and records nothing) if it doesn't fit; re-reserving
         an existing key replaces it. A tier with unbounded capacity makes
         the reservation always succeed."""
         with self._lock:
             tiers = tuple(tiers) if tiers is not None else tuple(self.spill_order)
             old = self._reservations.pop(key, None)
-            cap, used, unbounded = self._capacity_used(tiers)
+            cap, used, unbounded = self._capacity_used(tiers, itemsize)
             if not unbounded:
                 held = sum(n for n, ts, _ in self._reservations.values()
                            if set(ts) & set(tiers))
@@ -303,37 +320,56 @@ class MemoryPoolManager:
             return sum(n for n, ts, _ in self._reservations.values()
                        if set(ts) & want)
 
-    def headroom(self, tiers: Sequence[str]) -> Optional[int]:
-        """Free bytes across ``tiers`` after occupancy (reservation-covered
-        entries excluded) and standing reservations (None = unbounded)."""
+    def headroom(self, tiers: Sequence[str],
+                 itemsize: Optional[int] = None) -> Optional[int]:
+        """Free *decoded-equivalent* bytes across ``tiers`` after occupancy
+        (reservation-covered entries excluded) and standing reservations
+        (None = unbounded). ``itemsize`` as in :meth:`reserve`."""
         with self._lock:
-            cap, used, unbounded = self._capacity_used(tiers)
+            cap, used, unbounded = self._capacity_used(tiers, itemsize)
             if unbounded:
                 return None
             return cap - used - self.reserved_bytes(tiers)
 
-    def _capacity_used(self, tiers: Sequence[str]) -> Tuple[int, int, bool]:
+    def tier_scale(self, name: str, itemsize: Optional[int]) -> float:
+        """On-wire bytes per decoded byte for entries at rest in ``name``
+        (< 1 on a codec-wrapped tier). ``None`` itemsize → 1.0, the
+        historical raw-byte accounting."""
+        if itemsize is None:
+            return 1.0
+        b = self._tier(name).backend
+        if isinstance(b, B.CodecBackend):
+            return b.codec.ratio(int(itemsize))
+        return 1.0
+
+    def _capacity_used(self, tiers: Sequence[str],
+                       itemsize: Optional[int] = None) -> Tuple[int, int, bool]:
         """(capacity, occupancy-net-of-covered-entries, any-unbounded)
-        across ``tiers``. Covered entries (key under a reservation's
-        ``covers`` prefix) are bounded by their reservation, which the
-        caller charges separately."""
-        cap = used = 0
+        across ``tiers``, in decoded-equivalent bytes when ``itemsize``
+        is given (each codec tier's capacity and occupancy are divided by
+        its wire/decoded ratio before summing — per tier, because the
+        ratio differs tier to tier). Covered entries (key under a
+        reservation's ``covers`` prefix) are bounded by their reservation,
+        which the caller charges separately."""
+        cap = used = 0.0
         unbounded = False
         names = set(tiers)
+        prefixes = tuple(c for _, ts, c in self._reservations.values()
+                         if c is not None and set(ts) & names)
         for t in tiers:
             st = self._tier(t)
             if st.capacity is None:
                 unbounded = True
-            else:
-                cap += st.capacity
-                used += st.used
-        if not unbounded:
-            prefixes = tuple(c for _, ts, c in self._reservations.values()
-                             if c is not None and set(ts) & names)
+                continue
+            scale = self.tier_scale(t, itemsize)
+            tier_used = st.used
             if prefixes:
-                used -= sum(e.nbytes for e in self.entries.values()
-                            if e.tier in names and e.key.startswith(prefixes))
-        return cap, used, unbounded
+                tier_used -= sum(e.nbytes for e in self.entries.values()
+                                 if e.tier == t and e.key.startswith(prefixes))
+            cap += st.capacity / scale
+            used += tier_used / scale
+        # floor capacity / ceil occupancy: rounding never over-admits
+        return int(math.floor(cap)), int(math.ceil(used)), unbounded
 
     # -- eviction notification -----------------------------------------
     def add_evict_listener(self, cb: Callable[[PoolEntry, str], None]) -> None:
@@ -422,21 +458,27 @@ class MemoryPoolManager:
             raise PoolCapacityError(
                 f"cannot evict {entry.key!r}: {entry.tier!r} is the last tier")
         src_st, dst_st = self._tier(entry.tier), self._tier(dst)
-        self._make_room(dst_st, entry.nbytes)
+        # the entry's at-rest size may change across the boundary: a spill
+        # into a codec tier quantizes (fewer wire bytes), a spill between
+        # two codec tiers moves the payload as-is. What actually crosses
+        # the link is the destination's wire size.
+        new_nbytes = int(dst_st.backend.wire_nbytes(entry.handle))
+        self._make_room(dst_st, new_nbytes)
         t_x = time.perf_counter()
         entry.handle = dst_st.backend.put(entry.handle)
-        self.transfer.record_pair(src_st.name, dst, entry.nbytes,
+        self.transfer.record_pair(src_st.name, dst, new_nbytes,
                                   time.perf_counter() - t_x)
         src_st.used -= entry.nbytes
-        dst_st.used += entry.nbytes
+        dst_st.used += new_nbytes
         dst_st.peak = max(dst_st.peak, dst_st.used)
         entry.tier = dst
+        entry.nbytes = new_nbytes
         self.stats.evictions += 1
-        self.stats.bytes_evicted += entry.nbytes
+        self.stats.bytes_evicted += new_nbytes
         if self.tracer.enabled:
             self.tracer.instant("pool", "spill",
                                 {"key": entry.key, "src": src_st.name,
-                                 "dst": dst, "nbytes": entry.nbytes})
+                                 "dst": dst, "nbytes": new_nbytes})
         for cb in self._evict_listeners:
             cb(entry, dst)
 
@@ -452,6 +494,8 @@ def default_pool(host_capacity: Optional[int] = None,
                  topology: Optional[TierTopology] = None,
                  transfer_depth: Optional[int] = None,
                  transfer_workers: int = 2,
+                 codec: Optional[str] = None,
+                 codec_below: Optional[str] = None,
                  tracer=None) -> MemoryPoolManager:
     """Build a pool from a declarative ``TierTopology`` — by default the
     standard three-tier chain: device HBM → host → modeled remote
@@ -460,6 +504,16 @@ def default_pool(host_capacity: Optional[int] = None,
     Capacities may be passed either through the legacy per-tier kwargs (the
     default chain only) or inside an explicit ``topology``'s specs — never
     both.
+
+    ``codec`` names a KV page codec (``"int8"``/``"fp8"``; ``None``/
+    ``"none"`` disables). Every tier from ``codec_below`` (default: the
+    topology's default store tier) down to the bottom of the chain gets its
+    backend wrapped in a :class:`~repro.pool.backend.CodecBackend`, so
+    pages quantize once on first arrival below the boundary and spills
+    deeper down move the compact payload as-is. Spills only ever descend,
+    so an encoded page can never land in an unwrapped tier. The boundary
+    must not be an accelerator tier — the compute path needs full-precision
+    pages on device.
 
     ``transfer_depth``/``transfer_workers`` build the engine here so callers
     outside the pool subsystem never construct a ``TransferEngine`` — depth
@@ -475,7 +529,27 @@ def default_pool(host_capacity: Optional[int] = None,
             "an explicit topology")
     if transfer is None and transfer_depth is not None:
         transfer = TransferEngine(depth=transfer_depth, workers=transfer_workers)
-    tiers = [TierState(s.name, B.backend_for(s, device), s.capacity)
-             for s in topology.tiers]
+    codec_obj = codec_mod.make_codec(codec)
+    boundary = codec_below if codec_below is not None \
+        else topology.default_store_tier
+    if codec_obj is not None and boundary not in topology.names:
+        raise ValueError(
+            f"kv_codec boundary tier {boundary!r} not in topology "
+            f"{list(topology.names)}")
+    tiers = []
+    below = False
+    for s in topology.tiers:
+        b = B.backend_for(s, device)
+        if codec_obj is not None:
+            if s.name == boundary:
+                below = True
+            if below:
+                if isinstance(b, B.DeviceBackend):
+                    raise ValueError(
+                        f"kv_codec boundary {boundary!r} would wrap "
+                        f"accelerator tier {s.name!r}; pick an "
+                        "off-accelerator tier")
+                b = B.CodecBackend(b, codec_obj)
+        tiers.append(TierState(s.name, b, s.capacity))
     return MemoryPoolManager(tiers, transfer=transfer, tracer=tracer,
                              topology=topology)

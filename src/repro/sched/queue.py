@@ -96,10 +96,18 @@ class AdmissionController:
     benchmark's queueing-pressure signal)."""
 
     def __init__(self, pool: MemoryPoolManager,
-                 tiers: Optional[Sequence[str]] = None) -> None:
+                 tiers: Optional[Sequence[str]] = None,
+                 itemsize: Optional[int] = None) -> None:
         self.pool = pool
         self.tiers = (tuple(tiers) if tiers is not None
                       else pool.admission_tiers)
+        # decoded element size of the pages this controller reserves for.
+        # With a KV codec active, reservations stay in full-precision bytes
+        # but codec tiers are counted at decoded-equivalent capacity — an
+        # int8 tier holds 4× the fp32 pages its raw byte budget suggests.
+        # Charging raw bytes there (the old behavior) double-charged
+        # compressed pages and silently halved/quartered admission.
+        self.itemsize = itemsize
         self.blocked = 0
 
     def try_admit(self, state: RequestState, nbytes: int,
@@ -107,7 +115,8 @@ class AdmissionController:
         """``covers``: the request's page-key prefix — its parked pages are
         charged via the reservation, not double-counted as occupancy."""
         key = f"admit/req{state.req_id}"
-        if self.pool.reserve(key, nbytes, self.tiers, covers=covers):
+        if self.pool.reserve(key, nbytes, self.tiers, covers=covers,
+                             itemsize=self.itemsize):
             state.reserve_key = key
             return True
         self.blocked += 1
@@ -120,14 +129,14 @@ class AdmissionController:
 
     def can_ever_admit(self, nbytes: int) -> bool:
         """Would the request fit in an *empty* pool — i.e. within the
-        tiers' raw capacities? (deadlock guard)"""
-        cap = 0
+        tiers' decoded-equivalent capacities? (deadlock guard)"""
+        cap = 0.0
         for t in self.tiers:
             tier_cap = self.pool.occupancy(t)[1]
             if tier_cap is None:
                 return True
-            cap += tier_cap
-        return nbytes <= cap
+            cap += tier_cap / self.pool.tier_scale(t, self.itemsize)
+        return nbytes <= int(cap)
 
 
 #: default specs for poisson_trace's mixed interactive/batch mode: tight

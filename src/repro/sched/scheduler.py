@@ -209,7 +209,10 @@ class ContinuousScheduler:
         self.pool = pool
         self._plan_cache = plan_cache
         self.queue = ArrivalQueue()
-        self.admission = AdmissionController(self.pool)
+        # worst-case reservation is in decoded bytes; itemsize lets the
+        # ledger count codec-wrapped tiers at decoded-equivalent capacity
+        self.admission = AdmissionController(
+            self.pool, itemsize=jnp.dtype(cfg.cache_dtype).itemsize)
         self._row_bytes = worst_case_page_bytes(
             model.cache_specs(1, cfg.max_seq, cfg.cache_dtype))
         # SLO-aware scheduling (repro.slo): policy objects + the parked

@@ -44,6 +44,7 @@ def model_and_params():
 
 def test_public_api_surface_is_pinned():
     assert repro.api.__all__ == [
+        "KVCodecConfig",
         "OffloadConfig",
         "HyperOffloadSession",
         "HW_SPECS",

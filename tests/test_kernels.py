@@ -8,10 +8,14 @@ import pytest
 
 from repro.kernels import ops
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.paged_attention import decode_attention_pallas
+from repro.kernels.paged_attention import (
+    decode_attention_pallas,
+    paged_decode_attention_pallas,
+)
 from repro.kernels.ref import (
     decode_attention_ref,
     flash_attention_ref,
+    paged_decode_attention_ref,
     ssd_scan_ref,
 )
 
@@ -73,6 +77,95 @@ def test_decode_attention(b, hq, hkv, c, d, pos):
     out = decode_attention_pallas(q, k, v, jnp.int32(pos), scale=d ** -0.5,
                                   block_k=32)
     ref = decode_attention_ref(q, k, v, jnp.int32(pos), scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode: page-table-driven kernel vs gather ref
+# ---------------------------------------------------------------------------
+
+
+def _paged_inputs(key, b, hq, hkv, d, page, n_pool):
+    ks = jax.random.split(jax.random.key(key), 5)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    kp = jax.random.normal(ks[1], (n_pool, b, page, hkv, d))
+    vp = jax.random.normal(ks[2], (n_pool, b, page, hkv, d))
+    kt = jax.random.normal(ks[3], (b, page, hkv, d))
+    vt = jax.random.normal(ks[4], (b, page, hkv, d))
+    return q, kp, vp, kt, vt
+
+
+@pytest.mark.parametrize("hq,hkv", [(2, 2), (8, 2), (4, 1)])   # GQA groups
+@pytest.mark.parametrize("cap", [None, 30.0])
+def test_paged_decode_gqa_and_softcap(hq, hkv, cap):
+    b, d, page = 2, 32, 8
+    q, kp, vp, kt, vt = _paged_inputs(10, b, hq, hkv, d, page, 5)
+    table = jnp.asarray([3, 0, 4], jnp.int32)     # scrambled, non-contiguous
+    args = (q, kp, vp, table, kt, vt, jnp.int32(5))
+    out = paged_decode_attention_pallas(*args, scale=d ** -0.5, logit_cap=cap)
+    ref = paged_decode_attention_ref(*args, scale=d ** -0.5, logit_cap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("table,tail_len", [
+    ((0, 1, 2, 3, 4), 5),   # all pages, partial tail
+    ((2, 4), 0),            # tail empty
+    ((1, 3), 8),            # tail exactly full (just-flushed boundary)
+    ((), 3),                # tail-only attention (no pages yet)
+    ((), 1),                # single-token tail
+])
+def test_paged_decode_tail_boundaries(table, tail_len):
+    """Ring-slot validity at the page boundary (ISSUE satellite): the
+    fused kernel must reproduce the two-segment merged softmax when the
+    tail is empty, partial, and exactly full."""
+    b, hq, hkv, d, page = 2, 4, 2, 32, 8
+    q, kp, vp, kt, vt = _paged_inputs(11, b, hq, hkv, d, page, 5)
+    args = (q, kp, vp, jnp.asarray(table, jnp.int32), kt, vt,
+            jnp.int32(tail_len))
+    out = paged_decode_attention_pallas(*args, scale=d ** -0.5)
+    ref = paged_decode_attention_ref(*args, scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_paged_decode_ref_is_bitwise_the_gather_path():
+    """The lowering-free ref path IS the legacy gather/concat math — this
+    identity is what makes codec-"none" fused serving token-identical."""
+    from repro.offload.kvcache import _paged_attend
+    b, hq, hkv, d, page = 2, 4, 2, 32, 8
+    q, kp, vp, kt, vt = _paged_inputs(12, b, hq, hkv, d, page, 6)
+    for table, tl in [((5, 1, 2), 4), ((0,), 0), ((), 7)]:
+        t = jnp.asarray(table, jnp.int32)
+        ref = paged_decode_attention_ref(q, kp, vp, t, kt, vt,
+                                         jnp.int32(tl), scale=d ** -0.5)
+        gather = _paged_attend(q, kp[t], vp[t], kt, vt, jnp.int32(tl),
+                               d ** -0.5)
+        assert bool(jnp.all(ref == gather))
+
+
+@pytest.mark.parametrize("pos", [63, 64, 65, 95, 96, 200])
+def test_decode_attention_ring_wrap_mid_block(pos):
+    """Ring wrap regression (ISSUE satellite): positions at, just past,
+    and mid-way through block boundaries of the ring cache, where the
+    validity mask wraps inside a kv block."""
+    b, hq, hkv, c, d = 2, 4, 2, 64, 32
+    ks = jax.random.split(jax.random.key(13), 3)
+    q = jax.random.normal(ks[0], (b, hq, d))
+    k = jax.random.normal(ks[1], (b, hkv, c, d))
+    v = jax.random.normal(ks[2], (b, hkv, c, d))
+    out = decode_attention_pallas(q, k, v, jnp.int32(pos), scale=d ** -0.5,
+                                  block_k=32)
+    ref = decode_attention_ref(q, k, v, jnp.int32(pos), scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_paged_decode_ops_wrapper_jits():
+    b, hq, hkv, d, page = 1, 4, 2, 16, 8
+    q, kp, vp, kt, vt = _paged_inputs(14, b, hq, hkv, d, page, 3)
+    t = jnp.asarray([1, 2], jnp.int32)
+    out = ops.paged_decode_attention(q, kp, vp, t, kt, vt, jnp.int32(2),
+                                     scale=d ** -0.5)
+    ref = paged_decode_attention_ref(q, kp, vp, t, kt, vt, jnp.int32(2),
+                                     scale=d ** -0.5)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
 
 

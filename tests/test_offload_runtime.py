@@ -133,3 +133,61 @@ def test_paged_kvcache_append_flush_and_sparse_selection():
                for k in cache.k_pool if k is not None)
     stats = cache.pool_stats()
     assert stats["bytes_stored"] > 0 and stats["bytes_fetched"] > 0
+
+
+def _filled_cache(codec=None, device_pages=None, seed=0,
+                  b=2, hq=4, hkv=2, d=32, page=8, s0=29):
+    pool = default_pool(codec=codec, codec_below="host") if codec \
+        else default_pool()
+    cache = PagedKVCache.create(batch=b, max_seq=64, page_size=page,
+                                n_kv_heads=hkv, head_dim=d, pool=pool,
+                                device_pages=device_pages)
+    ks = jax.random.split(jax.random.key(seed), 3)
+    cache.prefill(jax.random.normal(ks[0], (b, s0, hkv, d)),
+                  jax.random.normal(ks[1], (b, s0, hkv, d)))
+    q = jax.random.normal(ks[2], (b, hq, d))
+    return cache, q, d ** -0.5
+
+
+def test_attend_fused_bitwise_matches_gather_and_caches_pages():
+    """The fused decode path must be token-identical to the legacy
+    gather/concat path (same decoded pages, same math), and the device
+    page buffer must turn repeat visits into hits, not pool fetches."""
+    cache, q, scale = _filled_cache()
+    gather = cache.attend(q, scale=scale, top_k_pages=None)
+    fused = cache.attend_fused(q, scale=scale)
+    assert bool(jnp.all(fused == gather))
+    assert cache.buffer_misses == 3 and cache.buffer_hits == 0
+    fetches0 = cache.fetches
+    again = cache.attend_fused(q, scale=scale)
+    assert bool(jnp.all(again == gather))
+    assert cache.buffer_hits == 3 and cache.fetches == fetches0
+    # Pallas kernel variant: same pages, online-softmax numerics
+    out = cache.attend_fused(q, scale=scale, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gather),
+                               atol=2e-5)
+
+
+def test_attend_fused_restricted_budget_evicts_lru():
+    """A device_pages budget below the page count still serves sparse
+    selections (mixed pool/device residency) but refuses a selection
+    wider than the buffer instead of silently truncating it."""
+    cache, q, scale = _filled_cache(device_pages=2, seed=1)
+    top2 = cache.attend_fused(q, scale=scale, top_k_pages=2)
+    ref = cache.attend(q, scale=scale, top_k_pages=2)
+    assert bool(jnp.all(top2 == ref))
+    with pytest.raises(ValueError, match="smaller than one step's"):
+        cache.attend_fused(q, scale=scale)   # 3 pages > 2 slots
+
+
+def test_attend_fused_int8_codec_matches_gather_and_bounds_error():
+    """Under an int8 pool codec both paths decode the same quantized
+    pages — fused stays bitwise-identical to gather — and the result
+    stays close to a full-precision run of the same tokens."""
+    cache, q, scale = _filled_cache(codec="int8", seed=2)
+    exact, q2, _ = _filled_cache(codec=None, seed=2)
+    gather = cache.attend(q, scale=scale, top_k_pages=None)
+    fused = cache.attend_fused(q, scale=scale)
+    assert bool(jnp.all(fused == gather))
+    oracle = exact.attend(q2, scale=scale, top_k_pages=None)
+    assert float(jnp.max(jnp.abs(fused - oracle))) < 0.05

@@ -353,6 +353,145 @@ def test_property_spill_conserves_bytes_and_chain_order(n_tiers, seed):
 
 
 # ---------------------------------------------------------------------------
+# KV page codecs: round-trip bounds + on-wire byte accounting
+# ---------------------------------------------------------------------------
+
+
+def _rand_page(seed=0, shape=(2, 8, 2, 16)):
+    return jnp.asarray(np.random.default_rng(seed)
+                       .standard_normal(shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("name", ["int8", "fp8"])
+def test_codec_roundtrip_within_hard_bound(name):
+    from repro.pool import make_codec, roundtrip_bound
+    c = make_codec(name)
+    x = _rand_page(1)
+    payload, scale = c.encode(x)
+    y = c.decode(payload, scale, str(x.dtype))
+    assert y.shape == x.shape and y.dtype == x.dtype
+    err = float(jnp.max(jnp.abs(y - x)))
+    bound = roundtrip_bound(c, float(jnp.max(jnp.abs(x))))
+    assert err <= bound, (name, err, bound)
+    # 4-byte payloads become 1-byte payloads (+4B scale)
+    assert c.encoded_nbytes(x.shape, x.dtype) == x.size + 4
+    assert c.ratio(4) == 0.25
+
+
+def test_codec_none_and_unknown():
+    from repro.pool import make_codec
+    assert make_codec(None) is None and make_codec("none") is None
+    with pytest.raises(ValueError, match="unknown"):
+        make_codec("zstd")
+
+
+def test_codec_pool_records_wire_bytes_not_decoded():
+    """The byte-accounting bugfix: tier occupancy, bytes_stored/fetched,
+    and the per tier-pair calibration table must all see *encoded* bytes —
+    decoded nbytes would inflate measured bandwidth 4× under int8."""
+    p = default_pool(topology=TierTopology.default(),
+                     codec="int8", codec_below="host")
+    x = _rand_page(2)                                 # 4 KiB decoded
+    wire = x.size + 4
+    e = p.put("pg", x, tier="host")
+    assert e.nbytes == wire
+    snap = p.snapshot()
+    assert snap["tier/host"]["used"] == wire
+    assert snap["bytes_stored"] == wire
+    assert snap["transfer"]["pairs"]["device->host"]["bytes"] == wire
+    y = p.get("pg")
+    assert y.dtype == x.dtype and y.shape == x.shape
+    assert float(jnp.max(jnp.abs(y - x))) < 0.05
+    snap = p.snapshot()
+    assert snap["bytes_fetched"] == wire
+    assert snap["transfer"]["pairs"]["host->device"]["bytes"] == wire
+    # the measured-bandwidth path consumes these pairs directly
+    from repro.core.calibration import measurements_from_pairs
+    ms = measurements_from_pairs(snap["transfer"]["pairs"])
+    assert ms[("host", "device")].nbytes == wire
+    p.close()
+
+
+def test_codec_spill_encodes_at_boundary_and_moves_payload_below():
+    """Device→host spill quantizes (wire bytes shrink 4×); host→remote
+    moves the payload as-is — no re-encode, so quantization error does
+    NOT compound across the lower hop."""
+    x = _rand_page(3, (16, 16))                       # 1024 B decoded
+    wire = 16 * 16 + 4
+    p = default_pool(
+        topology=TierTopology.default(device_capacity=1500,
+                                      host_capacity=300),
+        codec="int8", codec_below="host")
+    p.put("p0", x, tier="device")
+    assert p.entries["p0"].nbytes == x.nbytes         # device: decoded
+    p.put("p1", x, tier="device")                     # spills p0 → host
+    assert p.tier_of("p0") == "host"
+    assert p.entries["p0"].nbytes == wire
+    one_hop = np.asarray(p.get("p0"))                 # single quantization
+    p.put("p2", x, tier="device")                     # p1→host, p0→remote
+    assert p.tier_of("p0") == "remote"
+    assert p.entries["p0"].nbytes == wire
+    pairs = p.snapshot()["transfer"]["pairs"]
+    assert pairs["host->remote"]["bytes"] == wire     # on-wire, encoded
+    # byte-identical to the one-hop decode: the payload moved untouched
+    np.testing.assert_array_equal(np.asarray(p.get("p0")), one_hop)
+    p.close()
+
+
+def test_codec_raises_admission_capacity():
+    """The admission bugfix: reservations stay in decoded bytes, but a
+    codec tier counts at decoded-equivalent capacity — 4× the raw byte
+    budget for fp32 pages in int8 — so quantization admits more, not
+    fewer, requests."""
+    p = default_pool(
+        topology=TierTopology.default(device_capacity=0, host_capacity=1100,
+                                      remote_capacity=0),
+        codec="int8", codec_below="host")
+    # raw-byte ledger (itemsize=None): 4000 decoded B can't fit in 1100
+    assert not p.reserve("raw", 4000, ("host",))
+    # decoded-equivalent ledger: 1100 B of int8 holds ~4384 fp32 bytes
+    assert p.reserve("scaled", 4000, ("host",), itemsize=4)
+    assert p.headroom(("host",), itemsize=4) == 4 * 1100 - 4000
+    p.release("scaled")
+    # occupancy is scaled per tier too: a parked page charges wire bytes
+    x = _rand_page(4, (16, 16))                       # 1024 B decoded
+    p.put("pg", x, tier="host")                       # 260 B at rest
+    assert p.headroom(("host",), itemsize=4) == 4 * (1100 - 260)
+    p.close()
+
+
+def test_codec_boundary_validation():
+    with pytest.raises(ValueError, match="accelerator"):
+        default_pool(codec="int8", codec_below="device")
+    with pytest.raises(ValueError, match="not in topology"):
+        default_pool(codec="int8", codec_below="nvme")
+    # codec None/none → no wrapping at all
+    p = default_pool(codec="none")
+    assert not isinstance(p.tiers["host"].backend, B.CodecBackend)
+    p.close()
+
+
+def test_codec_encoded_pages_survive_n_tier_chain():
+    """Every tier below the boundary is wrapped, so a page spilling to
+    the bottom of a deep chain stays decodable (an encoded payload can
+    never land in a plain tier)."""
+    unit = 300
+    topo = TierTopology(tiers=(
+        TierSpec("l0", kind="numpy", capacity=unit, admit=True),
+        TierSpec("l1", kind="numpy", capacity=unit),
+        TierSpec("l2", kind="numpy"),
+    ))
+    p = default_pool(topology=topo, codec="fp8", codec_below="l0")
+    x = _rand_page(5, (16, 16))
+    for i in range(3):
+        p.put(f"k{i}", x, tier="l0")                  # 260 B each encoded
+    assert p.tier_of("k0") == "l2"
+    y = p.get("k0")
+    assert float(jnp.max(jnp.abs(y - x))) < 0.5       # fp8, single hop
+    p.close()
+
+
+# ---------------------------------------------------------------------------
 # transfer engine: overlap semantics
 # ---------------------------------------------------------------------------
 

@@ -95,6 +95,44 @@ def test_offload_matches_sequential_and_evicts_to_host(model_and_params):
     pool.close()
 
 
+@pytest.mark.parametrize("codec", ["int8", "fp8"])
+def test_offload_with_kv_codec_stays_token_identical(model_and_params, codec):
+    """Quantized KV pages through the full continuous-scheduler
+    park/restore path: the same device-pressure trace as above, but
+    spilled pages round-trip through the codec host tier. On this trace
+    the quantization noise flips no greedy tokens (pinned empirically —
+    the hard requirement is the bounded codec round-trip, exercised end
+    to end), and the on-wire spill traffic shrinks ~4× for fp32 pages."""
+    model, params = model_and_params
+    row = worst_case_page_bytes(model.cache_specs(1, MAX_SEQ, jnp.float32))
+
+    def _run(name):
+        pool = default_pool(device_capacity=int(1.5 * row),
+                            host_capacity=4 * row,
+                            transfer=TransferEngine(depth=64),
+                            codec=name, codec_below="host")
+        sched = ContinuousScheduler(
+            model, params,
+            SchedulerConfig(max_batch=2, max_seq=MAX_SEQ, kv_offload=True),
+            pool=pool)
+        reqs = _mixed_trace()
+        raw = sched.run(reqs)
+        out = {r.seed: raw[r.req_id] for r in reqs}
+        snap = sched.pool_stats()
+        sched.close()
+        pool.close()
+        return out, snap
+
+    exact, snap0 = _run(None)
+    quant, snap1 = _run(codec)
+    assert snap1["evictions"] > 0                 # pressure actually spilled
+    for seed in exact:
+        np.testing.assert_array_equal(quant[seed], exact[seed])
+    spill0 = snap0["transfer"]["pairs"]["device->host"]["bytes"]
+    spill1 = snap1["transfer"]["pairs"]["device->host"]["bytes"]
+    assert spill1 * 2 <= spill0                   # >= 2x wire-byte reduction
+
+
 def test_prefetcher_issues_ahead_of_consumption(model_and_params):
     """The plan schedules every layer's fetch before its consumer, and at
     runtime most waits find the transfer already complete — the
